@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing, CSV rows."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List
+
+import jax
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,55 @@
+"""Paper §5.3 analogue: modeled energy per inference.
+
+Energy model from repro.hw: pJ/FLOP for MXU work, pJ/byte for each level
+of the memory hierarchy, plus static power x latency.  Compares the fused
+(VMEM-resident weights) execution against a BLAS-style execution whose
+intermediates round-trip HBM — the paper's energy-efficiency argument in
+numbers.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro import hw
+from repro.configs import DEEPBENCH_TASKS
+from repro.core import dse
+from repro.core.cells import RNNCellConfig
+
+
+def energy_joules(cfg: RNNCellConfig, fused: bool,
+                  spec: hw.HardwareSpec = hw.TPU_V5E) -> float:
+    g, H, D, T = cfg.n_gates, cfg.hidden, cfg.d, cfg.timesteps
+    flops = 2.0 * g * H * (H + D) * T
+    e = flops * spec.pj_per_flop_bf16 * 1e-12
+    w_bytes = cfg.weight_bytes()
+    plan = dse.best_plan(cfg, spec)
+    if fused and plan.resident:
+        hbm_bytes = w_bytes + T * (D + H) * 2          # weights once + io
+        vmem_bytes = T * w_bytes                       # re-read per step
+    else:
+        # BLAS-style: gate pre-activations (g*H) round-trip HBM each step,
+        # weights re-streamed when not resident
+        hbm_bytes = T * (w_bytes + 3 * g * H * 4 + (D + H) * 2)
+        vmem_bytes = T * w_bytes
+    e += hbm_bytes * spec.pj_per_byte_hbm * 1e-12
+    e += vmem_bytes * spec.pj_per_byte_vmem * 1e-12
+    e += spec.idle_watts * plan.step_latency_s * T
+    return e
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    for task in DEEPBENCH_TASKS:
+        cfg = RNNCellConfig(task.cell, task.hidden, timesteps=task.timesteps,
+                            precision="int8")
+        ef = energy_joules(cfg, fused=True)
+        eb = energy_joules(cfg, fused=False)
+        rows.append(Row(
+            name=f"energy/{task.name}",
+            us_per_call=0.0,
+            derived=(f"fused_mj={ef*1e3:.3f};blas_mj={eb*1e3:.3f};"
+                     f"saving={eb/ef:.2f}x"),
+        ))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 4: compute fragmentation, MVM-tiled vs loop-based designs.
+
+Utilization = useful MACs / issued MACs for (a) a Brainwave-geometry tiled
+MVM engine (2-D fragmentation on H and R) and (b) the loop-based design
+(1-D fragmentation on R only), across hidden sizes.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import dse
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    ratios = []
+    for H in (256, 512, 1024, 1536, 2048, 2560, 2816):
+        f = dse.fragmentation(H)
+        ratios.append(f["util_loop"] / f["util_mvm_bw"])
+        rows.append(Row(
+            name=f"fragmentation/H{H}",
+            us_per_call=0.0,
+            derived=(f"util_loop={f['util_loop']:.3f};"
+                     f"util_mvm_bw={f['util_mvm_bw']:.3f};"
+                     f"advantage={ratios[-1]:.2f}x"),
+        ))
+    geo = 1.0
+    for r in ratios:
+        geo *= r
+    geo **= 1.0 / len(ratios)
+    rows.append(Row("fragmentation/geomean_advantage", 0.0,
+                    f"advantage={geo:.2f}x"))
+    return rows

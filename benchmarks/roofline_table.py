@@ -1,0 +1,57 @@
+"""The assignment's §Roofline table: aggregates results/dryrun/*.json.
+
+One row per (arch x shape) single-pod cell: the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.  Also emits
+the markdown table EXPERIMENTS.md embeds (via --write-md in
+repro.launch.report).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(pattern: str = "*_single.json") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    for cell in load_cells():
+        name = f"roofline/{cell['arch']}/{cell['shape']}"
+        if cell.get("skip"):
+            rows.append(Row(name, 0.0, "skip=" + cell["skip"][:60]))
+            continue
+        if not cell.get("ok"):
+            rows.append(Row(name, 0.0, "ERROR=" +
+                            str(cell.get("error", ""))[:80]))
+            continue
+        r = cell.get("roofline")
+        if not r:
+            rows.append(Row(name, 0.0, "no-pieces"))
+            continue
+        rows.append(Row(
+            name=name,
+            us_per_call=r["step_s"] * 1e6,
+            derived=(f"compute_ms={r['compute_s']*1e3:.3f};"
+                     f"memory_ms={r['memory_s']*1e3:.3f};"
+                     f"collective_ms={r['collective_s']*1e3:.3f};"
+                     f"dominant={r['dominant']};"
+                     f"useful={r['useful_ratio']:.3f};"
+                     f"roofline_frac={r['roofline_frac']:.4f}"),
+        ))
+    if not rows:
+        rows.append(Row("roofline/none", 0.0,
+                        f"no dry-run results under {RESULTS}"))
+    return rows

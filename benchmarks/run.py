@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    energy,
+    fig4_fragmentation,
+    roofline_table,
+    table6_deepbench,
+    table7_dse,
+)
+
+SUITES = {
+    "table6_deepbench": table6_deepbench,
+    "table7_dse": table7_dse,
+    "fig4_fragmentation": fig4_fragmentation,
+    "energy": energy,
+    "roofline_table": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full timesteps for measured benchmarks")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in SUITES.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for row in mod.run(fast=not args.full):
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table 6: DeepBench RNN inference latency / effective TFLOPS.
+
+Per task we report:
+  * measured CPU-JAX per-step latency of the BLAS-based vs loop-based-fused
+    execution models (the paper's §3 comparison, on this host),
+  * the *modeled* TPU-v5e latency of the fused Pallas kernel from the DSE
+    cost model (no TPU in this container; the model is the same roofline
+    arithmetic the §Roofline analysis uses),
+  * the paper's reported Plasticine/Brainwave/V100 numbers for context.
+
+derived column: full-sequence modeled latency (ms) on TPU + effective
+TFLOPS at that latency + the paper-reported baselines.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_jax
+from repro.configs import DEEPBENCH_TASKS
+from repro.core import dse
+from repro.core.cells import RNNCellConfig, init_weights, quantize_weights, serve
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    for task in DEEPBENCH_TASKS:
+        cfg = RNNCellConfig(task.cell, task.hidden,
+                            timesteps=task.timesteps, batch=1,
+                            precision="int8")
+        w = quantize_weights(cfg, init_weights(cfg, jax.random.PRNGKey(0)))
+        t_meas = min(task.timesteps, 8 if fast else task.timesteps)
+        x = jax.random.normal(jax.random.PRNGKey(1), (t_meas, 1, cfg.d),
+                              jnp.bfloat16)
+
+        fused = jax.jit(lambda xx, ww=w, cc=cfg: serve(cc, ww, xx, "fused"))
+        blas = jax.jit(lambda xx, ww=w, cc=cfg: serve(cc, ww, xx, "blas"))
+        us_fused = time_jax(fused, x) / t_meas
+        us_blas = time_jax(blas, x) / t_meas
+
+        plan = dse.best_plan(cfg)
+        tpu_ms = plan.step_latency_s * task.timesteps * 1e3
+        flops = cfg.flops_per_step() * task.timesteps
+        eff_tflops = flops / (tpu_ms * 1e-3) / 1e12
+        rows.append(Row(
+            name=f"deepbench/{task.name}/cpu_fused_step",
+            us_per_call=us_fused,
+            derived=(f"blas_step_us={us_blas:.1f};"
+                     f"fused_speedup={us_blas/us_fused:.2f}x;"
+                     f"tpu_model_ms={tpu_ms:.4f};"
+                     f"tpu_eff_tflops={eff_tflops:.2f};"
+                     f"paper_plasticine_ms={task.ms_plasticine};"
+                     f"paper_bw_ms={task.ms_brainwave};"
+                     f"paper_v100_ms={task.ms_v100}"),
+        ))
+    return rows

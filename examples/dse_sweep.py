@@ -1,0 +1,43 @@
+"""Design-space exploration sweep (the paper's Table 7 workflow).
+
+  PYTHONPATH=src python examples/dse_sweep.py [--cell lstm] [--hidden 1024]
+
+Prints every candidate plan for one problem size, then the chosen plan for
+each DeepBench task.
+"""
+
+import argparse
+
+from repro import hw
+from repro.configs import DEEPBENCH_TASKS
+from repro.core import dse
+from repro.core.cells import RNNCellConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="lstm")
+    ap.add_argument("--hidden", type=int, default=1024)
+    args = ap.parse_args()
+
+    cfg = RNNCellConfig(args.cell, args.hidden, precision="int8")
+    print(f"candidates for {args.cell} H={args.hidden} "
+          f"(VMEM budget {hw.vmem_budget()//2**20} MiB):")
+    for p in dse.search(cfg):
+        mark = " <== best" if p == dse.best_plan(cfg) else ""
+        print(f"  bh={p.bh:5d} tiles={p.n_tiles:3d} "
+              f"vmem={p.vmem_bytes/2**20:7.2f}MiB resident={p.resident!s:5s} "
+              f"lat={p.step_latency_s*1e6:8.3f}us bound={p.bound}{mark}")
+
+    print("\nchosen plans per DeepBench task:")
+    for t in DEEPBENCH_TASKS:
+        c = RNNCellConfig(t.cell, t.hidden, timesteps=t.timesteps,
+                          precision="int8")
+        p = dse.best_plan(c)
+        print(f"  {t.name:20s} bh={p.bh:5d} tiles={p.n_tiles:3d} "
+              f"util={p.util:.3f} bound={p.bound:8s} "
+              f"seq_latency={p.step_latency_s*t.timesteps*1e3:9.4f}ms")
+
+
+if __name__ == "__main__":
+    main()

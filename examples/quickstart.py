@@ -1,0 +1,60 @@
+"""Quickstart: the three layers of the framework in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. The paper's core: serve a DeepBench-style LSTM through the fused Pallas
+   kernel (interpret mode on CPU) and compare against the BLAS baseline.
+2. The framework: one training step of an assigned architecture (reduced).
+3. Serving: prefill + a few decode steps with the KV cache.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cells import RNNCellConfig, init_weights, quantize_weights, serve
+from repro.core.dse import best_plan
+from repro.dist.sharding import Sharder
+from repro.models.inputs import make_batch
+from repro.models.lm import build_model
+from repro.optim import AdamW, cosine_schedule
+from repro.optim.adamw import init_state
+from repro.testing import reduced_config, smoke_shape
+from repro.train.step import make_train_step
+
+# --- 1. the paper: fused RNN serving --------------------------------------
+cfg = RNNCellConfig("lstm", hidden=256, timesteps=8, batch=1,
+                    precision="int8")
+weights = quantize_weights(cfg, init_weights(cfg, jax.random.PRNGKey(0)))
+x_seq = jax.random.normal(jax.random.PRNGKey(1), (8, 1, 256), jnp.bfloat16)
+y_kernel = serve(cfg, weights, x_seq, impl="kernel")   # Pallas (interpret)
+y_blas = serve(cfg, weights, x_seq, impl="blas")       # paper's baseline
+plan = best_plan(cfg)
+print(f"[paper] fused-vs-blas max diff: "
+      f"{float(jnp.max(jnp.abs(y_kernel.astype(jnp.float32) - y_blas))):.4f}")
+print(f"[paper] DSE plan: bh={plan.bh}, resident={plan.resident}, "
+      f"bound={plan.bound}, modeled step latency "
+      f"{plan.step_latency_s*1e6:.2f}us")
+
+# --- 2. one training step of an assigned architecture ---------------------
+arch = reduced_config("gemma3-12b")
+model = build_model(arch)
+sharder = Sharder(None, {})
+state = init_state(model.param_specs(), jax.random.PRNGKey(0))
+opt = AdamW(lr=cosine_schedule(1e-3, 10, 100))
+step = jax.jit(make_train_step(model, opt, sharder))
+batch = {k: jnp.asarray(v) for k, v in
+         make_batch(arch, smoke_shape("train", seq=16, batch=2)).items()}
+state, metrics = step(state, batch)
+print(f"[train] {arch.name}: loss={float(metrics['loss']):.3f} "
+      f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+# --- 3. prefill + decode with the KV cache ---------------------------------
+params = state["params"]
+prompt = {"tokens": batch["tokens"][:, :8]}
+cache, logits = model.prefill(params, prompt, sharder, max_len=16)
+for _ in range(4):
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    cache, logits = model.decode_step(params, cache, tok, sharder)
+print(f"[serve] decoded 4 tokens, cache length = "
+      f"{int(cache['lengths'][0])}, logits finite = "
+      f"{bool(jnp.all(jnp.isfinite(logits)))}")

@@ -1,0 +1,56 @@
+"""End-to-end driver for the paper's own scenario: real-time RNN serving
+over the DeepBench task list (batch-of-1 requests, strict latency).
+
+  PYTHONPATH=src python examples/serve_rnn_deepbench.py [--tasks N] [--t N]
+
+For each task: run the request through all three execution models, check
+they agree, and report measured CPU step latency plus the modeled TPU-v5e
+latency / effective TFLOPS next to the paper's reported numbers.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import DEEPBENCH_TASKS
+from repro.core.cells import RNNCellConfig, init_weights, quantize_weights, serve
+from repro.core.dse import best_plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--t", type=int, default=8, help="timesteps to run")
+    args = ap.parse_args()
+
+    print(f"{'task':20s} {'agree':>7s} {'cpu_us/step':>12s} "
+          f"{'tpu_model_ms':>13s} {'eff_TFLOPS':>11s} {'paper_ms':>9s}")
+    for task in DEEPBENCH_TASKS[:args.tasks]:
+        cfg = RNNCellConfig(task.cell, task.hidden, timesteps=task.timesteps,
+                            batch=1, precision="int8")
+        w = quantize_weights(cfg, init_weights(cfg, jax.random.PRNGKey(0)))
+        T = min(args.t, task.timesteps)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, 1, cfg.d),
+                              jnp.bfloat16)
+        y_fused = serve(cfg, w, x, impl="kernel")
+        y_blas = serve(cfg, w, x, impl="blas")
+        agree = float(jnp.max(jnp.abs(
+            y_fused.astype(jnp.float32) - y_blas))) < 5e-2
+
+        fn = jax.jit(lambda xx: serve(cfg, w, xx, impl="fused"))
+        jax.block_until_ready(fn(x))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        cpu_us = (time.perf_counter() - t0) / T * 1e6
+
+        plan = best_plan(cfg)
+        tpu_ms = plan.step_latency_s * task.timesteps * 1e3
+        eff = cfg.flops_per_step() * task.timesteps / (tpu_ms * 1e-3) / 1e12
+        print(f"{task.name:20s} {str(agree):>7s} {cpu_us:12.1f} "
+              f"{tpu_ms:13.4f} {eff:11.1f} {task.ms_plasticine:9.4f}")
+
+
+if __name__ == "__main__":
+    main()

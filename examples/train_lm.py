@@ -1,0 +1,53 @@
+"""End-to-end training driver: data pipeline -> microbatched train step ->
+checkpointing -> restart, on a reduced assigned architecture.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch rwkv6-1.6b]
+      [--steps 40] [--big]
+
+``--big`` switches to a ~100M-parameter configuration (slower on CPU; the
+same code path the full configs lower on the production mesh).
+"""
+
+import argparse
+import dataclasses
+import logging
+import tempfile
+
+from repro.configs.base import ShapeSpec
+from repro.dist.sharding import Sharder
+from repro.models.lm import build_model
+from repro.testing import reduced_config
+from repro.train.loop import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params instead of the tiny smoke config")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    cfg = reduced_config(args.arch)
+    if args.big:
+        cfg = dataclasses.replace(
+            cfg, d_model=512, d_ff=2048, n_heads=8, n_kv_heads=4,
+            head_dim=64, vocab_size=32_000, n_layers=2 * cfg.period)
+    model = build_model(cfg)
+    print(f"{cfg.name}: {model.n_params()/1e6:.1f}M params")
+
+    shape = ShapeSpec("example", args.seq, args.batch, "train")
+    with tempfile.TemporaryDirectory() as d:
+        loop = TrainLoopConfig(total_steps=args.steps,
+                               checkpoint_every=max(10, args.steps // 2),
+                               checkpoint_dir=d, log_every=5)
+        state, history = train(model, shape, Sharder(None, {}), loop)
+    print(f"loss: {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f} "
+          f"over {len(history)} steps")
+
+
+if __name__ == "__main__":
+    main()

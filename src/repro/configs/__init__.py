@@ -1,0 +1,111 @@
+"""Architecture registry.
+
+``get_config(arch_id)`` resolves the public ``--arch`` ids (dashed, as given
+in the assignment) to :class:`repro.configs.base.ModelConfig` instances.
+``SHAPES`` / ``get_shape`` resolve the input-shape cells.  ``grid()``
+enumerates the full (architecture x shape) assignment grid together with the
+applicability rule for each cell.
+
+The paper's own workload — DeepBench RNN serving — is configured via
+``DEEPBENCH_TASKS`` (consumed by :mod:`repro.core` and the benchmarks); the
+RNN cell is not an LM architecture and lives outside the LM shape grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeSpec,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+
+from repro.configs import (  # noqa: E402  (import the arch modules)
+    qwen2_5_14b,
+    gemma2_9b,
+    gemma3_12b,
+    starcoder2_15b,
+    whisper_tiny,
+    rwkv6_1_6b,
+    qwen2_vl_2b,
+    granite_moe_1b,
+    qwen3_moe_30b,
+    hymba_1_5b,
+)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen2_5_14b,
+        gemma2_9b,
+        gemma3_12b,
+        starcoder2_15b,
+        whisper_tiny,
+        rwkv6_1_6b,
+        qwen2_vl_2b,
+        granite_moe_1b,
+        qwen3_moe_30b,
+        hymba_1_5b,
+    )
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_shape(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def grid() -> Iterator[Tuple[ModelConfig, ShapeSpec, bool, str]]:
+    """All 40 (arch x shape) cells with (runs, skip_reason)."""
+    for cfg in ARCHS.values():
+        for shape in SHAPES.values():
+            runs, reason = cfg.runs_shape(shape)
+            yield cfg, shape, runs, reason
+
+
+# ---------------------------------------------------------------------------
+# The paper's own benchmark: Baidu DeepBench RNN inference tasks (Table 6).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepBenchTask:
+    cell: str            # "lstm" | "gru"
+    hidden: int          # H (== input features D in DeepBench)
+    timesteps: int       # T
+    # Paper-reported latencies in ms (Table 6) for comparison columns.
+    ms_cpu: float = 0.0
+    ms_v100: float = 0.0
+    ms_brainwave: float = 0.0
+    ms_plasticine: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return f"{self.cell}-h{self.hidden}-t{self.timesteps}"
+
+
+DEEPBENCH_TASKS = (
+    DeepBenchTask("lstm", 256, 150, 15.75, 1.69, 0.425, 0.0419),
+    DeepBenchTask("lstm", 512, 25, 11.50, 0.60, 0.077, 0.0139),
+    DeepBenchTask("lstm", 1024, 25, 107.65, 0.71, 0.074, 0.0292),
+    DeepBenchTask("lstm", 1536, 50, 411.00, 4.38, 0.145, 0.1224),
+    DeepBenchTask("lstm", 2048, 25, 429.36, 1.55, 0.074, 0.1060),
+    DeepBenchTask("gru", 512, 1, 0.91, 0.39, 0.013, 0.0004),
+    DeepBenchTask("gru", 1024, 1500, 3810.00, 33.77, 3.792, 1.4430),
+    DeepBenchTask("gru", 1536, 375, 2730.00, 13.12, 0.951, 0.7463),
+    DeepBenchTask("gru", 2048, 375, 5040.00, 17.70, 0.954, 1.2833),
+    DeepBenchTask("gru", 2560, 375, 7590.00, 23.57, 0.993, 1.9733),
+)

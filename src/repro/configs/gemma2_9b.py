@@ -1,0 +1,33 @@
+"""Gemma2-9B  [dense]  42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000 — local+global alternating, logit softcap.  [arXiv:2408.00118; hf]
+
+head_dim is 256 (16 x 256 = 4096 > d_model, as in the release).  The layer
+stack alternates (local sliding-window, global) pairs -> scan period 2,
+21 periods.  Attention soft-capping 50.0, final-logit soft-capping 30.0.
+Long-context eligible: local layers cache only their 4096-token window.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    layer_pattern=("local", "attn"),
+    local_window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    mlp_act="gelu",
+    fsdp=True,
+    remat="full",
+    n_microbatches=8,
+    attention_sharding="heads",   # 16 heads / 16-way model axis
+)

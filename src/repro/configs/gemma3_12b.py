@@ -1,0 +1,32 @@
+"""Gemma3-12B  [dense]  48L d_model=3840 16H (GQA kv=8) d_ff=15360
+vocab=262144 — 5:1 local:global, 128k context.  [hf:google/gemma-3-1b-pt]
+
+Scan period is the 6-layer (5 local + 1 global) superblock -> 8 periods.
+QK-norm replaces gemma2's attention soft-capping.  1024-token local window
+keeps the long_500k KV cache dominated by the 8 global layers.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    rope_theta=1e6,
+    layer_pattern=("local", "local", "local", "local", "local", "attn"),
+    local_window=1024,
+    qk_norm=True,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    mlp_act="gelu",
+    fsdp=True,
+    remat="full",
+    n_microbatches=8,
+    attention_sharding="heads",
+)

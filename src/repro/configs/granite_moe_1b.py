@@ -1,0 +1,28 @@
+"""Granite-3.0-1B-A400M  [moe]  24L d_model=1024 16H (GQA kv=8) d_ff=512,
+MoE 32 experts top-8.  [hf:ibm-granite/granite-3.0-1b-a400m-base]
+
+32 experts shard 2-per-device over the 16-way model axis (expert
+parallelism); GShard-style dispatch/combine einsums produce the all-to-alls.
+Tiny d_ff=512 makes dispatch overhead the dominant inefficiency — this cell
+is a candidate for the sort-based dispatch hillclimb.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    layer_pattern=("attn",),
+    moe=MoEConfig(n_experts=32, top_k=8, capacity_factor=1.25, group_size=512),
+    tie_embeddings=True,
+    remat="full",
+    n_microbatches=2,
+    attention_sharding="heads",
+)

@@ -1,0 +1,34 @@
+"""Hymba-1.5B  [hybrid]  32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attention + mamba heads.
+[arXiv:2411.13676; hf]
+
+Each hybrid layer runs sliding-window attention heads and SSM (Mamba-style)
+heads in parallel on the same input and sums their (normed) outputs.  The
+release's 3 full-attention layers are modelled as one global layer per
+16-layer scan period (period = 1 "attn" + 15 "swa_ssm").  The SSM uses the
+SSD scalar-per-head-decay form (see DESIGN.md §Hardware-adaptation) with
+d_state=16.  Sub-quadratic: runs long_500k.
+
+25 query heads !| 16 -> qseq attention sharding.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    layer_pattern=("attn",) + ("swa_ssm",) * 15,
+    local_window=1024,
+    ssm=SSMConfig(d_state=16, expand=2, head_dim=64, conv_width=4, chunk=128),
+    tie_embeddings=True,
+    remat="full",
+    n_microbatches=2,
+    attention_sharding="qseq",
+)

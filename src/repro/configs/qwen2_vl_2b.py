@@ -1,0 +1,30 @@
+"""Qwen2-VL-2B  [vlm]  28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936 — M-RoPE, dynamic resolution.  [arXiv:2409.12191; hf]
+
+Backbone only: the vision tower is a stub and ``input_specs()`` carries
+precomputed 3D (temporal, height, width) M-RoPE position ids alongside the
+token stream.  head_dim 128 is split (32, 48, 48) across the three position
+streams (rotary pairs 16/24/24).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    m_rope_sections=(16, 24, 24),   # rotary-pair split of head_dim // 2
+    layer_pattern=("attn",),
+    tie_embeddings=True,
+    remat="full",
+    n_microbatches=2,
+    attention_sharding="qseq",      # 12 heads !| 16
+)

@@ -1,0 +1,29 @@
+"""Qwen3-30B-A3B  [moe]  48L d_model=2048 32H (GQA kv=4) d_ff=768,
+MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B]
+
+30.5B total / ~3.3B active params.  128 experts shard 8-per-device over the
+model axis; expert weights additionally FSDP-shard over the data axis so
+params + Adam state fit 16 GB/chip at train_4k.  QK-norm, head_dim 128.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab_size=151936,
+    rope_theta=1e6,
+    qk_norm=True,
+    layer_pattern=("attn",),
+    moe=MoEConfig(n_experts=128, top_k=8, capacity_factor=1.25, group_size=512),
+    fsdp=True,
+    remat="full",
+    n_microbatches=8,
+    attention_sharding="heads",
+)

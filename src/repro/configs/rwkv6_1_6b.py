@@ -1,0 +1,31 @@
+"""RWKV6-1.6B (Finch)  [ssm]  24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 — data-dependent decay.  [arXiv:2404.05892]
+
+This is the architecture closest to the paper's own subject: a recurrent
+cell whose serving step is a fused matvec + elementwise program.  The WKV
+state update S_t = diag(w_t) S_{t-1} + k_t v_t^T is evaluated in the
+TPU-friendly chunked form (repro.models.recurrence) for train/prefill and
+as the paper-style fused single-step recurrence for decode.  O(1) state
+makes every shape cell, including long_500k, runnable.
+"""
+
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="rwkv",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,                 # wkv heads = d_model / rwkv.head_dim
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    layer_pattern=("rwkv",),
+    rwkv=RWKVConfig(head_dim=64, chunk=128, ffn_mult=3.5),
+    mlp_gated=False,            # rwkv channel-mix is its own 2-matrix block
+    mlp_act="relu_sq",
+    remat="full",
+    n_microbatches=2,
+    attention_sharding="heads",  # 32 wkv heads / 16
+)

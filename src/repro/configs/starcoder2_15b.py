@@ -1,0 +1,30 @@
+"""StarCoder2-15B  [dense]  40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152 — GQA, RoPE.  [arXiv:2402.19173; hf]
+
+Classic 4x non-gated GELU MLP.  48 heads divide the 16-way model axis;
+4 KV heads are replicated across it (flat kv projection dim 512 still
+divides 16 for the weights).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    qkv_bias=True,
+    rope_theta=1e5,
+    layer_pattern=("attn",),
+    mlp_gated=False,
+    mlp_act="gelu",
+    fsdp=True,
+    remat="full",
+    n_microbatches=8,
+    attention_sharding="heads",
+)

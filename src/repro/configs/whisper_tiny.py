@@ -1,0 +1,34 @@
+"""Whisper-tiny  [audio]  4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865
+— enc-dec, conv frontend (stub).  [arXiv:2212.04356]
+
+The transformer backbone only: ``input_specs()`` provides precomputed frame
+embeddings of shape (batch, seq // encoder_downsample, d_model) standing in
+for the conv1d frontend (stride-2 stub).  4 encoder layers (bidirectional)
++ 4 decoder layers (causal self-attn + cross-attn).  6 heads do not divide
+the model axis -> qseq attention sharding; the model is small enough that
+most weights are effectively replicated.
+
+Decode shapes exercise the *decoder* with a cached encoder output.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,                  # decoder layers
+    n_encoder_layers=4,
+    encoder_downsample=2,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    layer_pattern=("attn",),
+    mlp_gated=False,
+    mlp_act="gelu",
+    remat="none",
+    n_microbatches=1,
+    attention_sharding="qseq",
+)

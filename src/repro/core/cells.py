@@ -1,0 +1,219 @@
+"""RNN cell implementations: the paper's loop-based fused form and the
+BLAS-based baselines it argues against.
+
+Three execution models of the *same* LSTM/GRU math (§3 of the paper):
+
+  "blas"      — BasicLSTM style (Fig. 1a): eight separate gate GEMVs
+                (W_h·h and W_x·x per gate), every intermediate materialized.
+  "semifused" — CudnnLSTM style (Fig. 1b): one concatenated [Wx|Wh] GEMV
+                over [x;h], elementwise tail fused by the compiler, but the
+                H-sized gate pre-activations still round-trip memory.
+  "fused"     — the paper's loop-based form: gate dot products, bias,
+                nonlinearities, and the c/h update fused into one kernel so
+                intermediates never leave registers.  On TPU this is the
+                Pallas kernel (repro.kernels.fused_rnn); this module holds
+                its jnp semantics (= the kernel's oracle) plus the serving
+                drivers that scan the cell over time with weights pinned
+                on-chip.
+
+Weights layout (all implementations share it):
+  LSTM: w_x (D, 4, H), w_h (H, 4, H), b (4, H)   gate order (i, j, f, o)
+  GRU:  w_x (D, 3, H), w_h (H, 3, H), b_x/b_h (3, H)  gate order (r, z, n)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import blocked_fp, dequantize_int8, quantize_int8
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class RNNCellConfig:
+    cell: str                 # "lstm" | "gru"
+    hidden: int               # H
+    features: int = 0         # D (DeepBench: D == H)
+    timesteps: int = 1        # T
+    batch: int = 1            # real-time serving: batch of 1
+    precision: str = "int8"   # "int8" | "bf16" | "f32" | "blocked_fp"
+
+    @property
+    def d(self) -> int:
+        return self.features or self.hidden
+
+    @property
+    def n_gates(self) -> int:
+        return 4 if self.cell == "lstm" else 3
+
+    def flops_per_step(self) -> float:
+        """MACs x2: the gate matvecs dominate (paper §4.2: 2N^2 per N)."""
+        g = self.n_gates
+        return 2.0 * g * self.hidden * (self.hidden + self.d) * self.batch
+
+    def weight_bytes(self) -> float:
+        itemsize = {"int8": 1, "bf16": 2, "f32": 4, "blocked_fp": 1}[
+            self.precision]
+        g = self.n_gates
+        return g * self.hidden * (self.hidden + self.d) * itemsize
+
+
+def init_weights(cfg: RNNCellConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    g, H, D = cfg.n_gates, cfg.hidden, cfg.d
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(H + D)
+    w = {
+        "w_x": jax.random.uniform(k1, (D, g, H), F32, -s, s),
+        "w_h": jax.random.uniform(k2, (H, g, H), F32, -s, s),
+        "b": jnp.zeros((g, H), F32),
+    }
+    if cfg.cell == "gru":
+        w["b_h"] = jnp.zeros((g, H), F32)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Single-step cell math — three execution models
+# ---------------------------------------------------------------------------
+
+
+def lstm_step_blas(w, x, h, c):
+    """BasicLSTM: one GEMV per (gate x input) — 8 kernels + adds."""
+    outs = []
+    for g in range(4):
+        zx = x @ w["w_x"][:, g, :]           # separate kernels, materialized
+        zh = h @ w["w_h"][:, g, :]
+        outs.append(zx + zh + w["b"][g])
+    i, j, f, o = outs
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(j)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_step_fused(w, x, h, c):
+    """Loop-based/fused semantics: concatenated weights, single contraction,
+    elementwise tail in registers.  (= the Pallas kernel's oracle.)"""
+    B = x.shape[0]
+    H = w["w_h"].shape[0]
+    xh = jnp.concatenate([x, h], axis=-1)                    # (B, D+H)
+    w_cat = jnp.concatenate([w["w_x"], w["w_h"]], axis=0)    # (D+H, 4, H)
+    z = jax.lax.dot_general(                                 # one GEMV
+        xh, w_cat.reshape(-1, 4 * H), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32).reshape(B, 4, H) + w["b"]
+    i, j, f, o = z[:, 0], z[:, 1], z[:, 2], z[:, 3]
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(j)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def gru_step_blas(w, x, h):
+    zx = [x @ w["w_x"][:, g, :] + w["b"][g] for g in range(3)]
+    zh = [h @ w["w_h"][:, g, :] + w["b_h"][g] for g in range(3)]
+    r = jax.nn.sigmoid(zx[0] + zh[0])
+    z = jax.nn.sigmoid(zx[1] + zh[1])
+    n = jnp.tanh(zx[2] + r * zh[2])
+    return (1 - z) * n + z * h
+
+
+def gru_step_fused(w, x, h):
+    B = x.shape[0]
+    H = w["w_h"].shape[0]
+    mm = lambda a, ww: jax.lax.dot_general(
+        a, ww.reshape(ww.shape[0], 3 * H), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32).reshape(B, 3, H)
+    zx = mm(x, w["w_x"]) + w["b"]
+    zh = mm(h, w["w_h"]) + w["b_h"]
+    r = jax.nn.sigmoid(zx[:, 0] + zh[:, 0])
+    z = jax.nn.sigmoid(zx[:, 1] + zh[:, 1])
+    n = jnp.tanh(zx[:, 2] + r * zh[:, 2])
+    return (1 - z) * n + z * h
+
+
+# ---------------------------------------------------------------------------
+# Precision transforms
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(cfg: RNNCellConfig, w: Dict[str, jax.Array]) -> Dict:
+    """Storage transform per cfg.precision (math still runs wide)."""
+    if cfg.precision == "f32":
+        return w
+    if cfg.precision == "bf16":
+        return {k: v.astype(jnp.bfloat16) for k, v in w.items()}
+    if cfg.precision == "blocked_fp":
+        return {k: (blocked_fp(v, block=16, mantissa_bits=4, axis=0)
+                    if k.startswith("w_") else v) for k, v in w.items()}
+    # int8: per-(gate, unit) symmetric scales over the contraction dim
+    out = {}
+    for k, v in w.items():
+        if k.startswith("w_"):
+            q, scale = quantize_int8(v, axis=0)
+            out[k] = q
+            out[k + "_scale"] = scale[0]                      # (g, H)
+        else:
+            out[k] = v
+    return out
+
+
+def dequantize_weights(w: Dict) -> Dict[str, jax.Array]:
+    out = {}
+    for k, v in w.items():
+        if k.endswith("_scale"):
+            continue
+        if k + "_scale" in w:
+            out[k] = v.astype(F32) * w[k + "_scale"][None]
+        else:
+            out[k] = v.astype(F32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving drivers: scan over time, weights stationary
+# ---------------------------------------------------------------------------
+
+
+def serve(cfg: RNNCellConfig, w: Dict, x_seq: jax.Array,
+          impl: str = "fused",
+          state: Optional[Tuple[jax.Array, ...]] = None) -> jax.Array:
+    """Run the full T-step sequence.  x_seq: (T, B, D) -> y (T, B, H).
+
+    ``impl``: "blas" | "semifused"/"fused" (jnp) | "kernel" (Pallas — see
+    repro.kernels.fused_rnn.ops, dispatched there to keep this module
+    importable without kernel deps).
+    """
+    if impl == "kernel":
+        from repro.kernels.fused_rnn import ops as kernel_ops
+        return kernel_ops.serve(cfg, w, x_seq, state=state)
+    wd = dequantize_weights(w) if cfg.precision in ("int8",) else \
+        {k: v.astype(F32) for k, v in w.items()}
+    B, H = x_seq.shape[1], cfg.hidden
+    if state is None:
+        h = jnp.zeros((B, H), F32)
+        c = jnp.zeros((B, H), F32)
+    else:
+        h, c = state[0], (state[1] if len(state) > 1 else None)
+
+    if cfg.cell == "lstm":
+        step_fn = lstm_step_blas if impl == "blas" else lstm_step_fused
+
+        def body(carry, x):
+            h, c = carry
+            h, c = step_fn(wd, x.astype(F32), h, c)
+            return (h, c), h
+
+        (_, _), ys = jax.lax.scan(body, (h, c), x_seq)
+    else:
+        step_fn = gru_step_blas if impl == "blas" else gru_step_fused
+
+        def body(carry, x):
+            h = step_fn(wd, x.astype(F32), carry)
+            return h, h
+
+        _, ys = jax.lax.scan(body, h, x_seq)
+    return ys

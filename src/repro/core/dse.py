@@ -1,0 +1,146 @@
+"""Design-space exploration for the fused RNN kernel.
+
+The paper's central systems claim (§3.3, Table 7): exposing the loop
+tiling/unrolling parameters (hv, hu, rv, ru) and searching them per problem
+size yields consistent utilization across DeepBench, unlike a
+fixed-geometry MVM engine (Brainwave's hv=400, rv=40, ru=6) that fragments
+2-D.  On TPU the parameter space collapses to:
+
+  rv  — lane vectorization: fixed at 128 by the MXU/VPU geometry,
+  bh  — the H-tile (hv x hu analogue): the kernel's BlockSpec row count,
+  ru  — reduction unrolling: subsumed by the MXU's internal systolic
+         reduction over the contraction dim,
+
+so the search is over ``bh`` under a VMEM-residency constraint, with an
+analytic latency model built from the hardware constants in repro.hw.
+``fragmentation`` reproduces Fig. 4's utilization comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro import hw
+from repro.core.cells import RNNCellConfig
+
+MXU = 128
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    bh: int                   # H-tile rows per grid step
+    n_tiles: int              # H / bh
+    vmem_bytes: int           # working set claimed by the BlockSpecs
+    resident: bool            # weights stay in VMEM across time steps
+    step_latency_s: float     # modeled per-timestep latency
+    util: float               # useful MACs / padded MACs
+    bound: str                # "compute" | "hbm" | "latency"
+
+
+def _pad(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def tile_vmem_bytes(cfg: RNNCellConfig, bh: int) -> int:
+    """VMEM bytes claimed per grid step (weights + state + io)."""
+    g, H, D, B = cfg.n_gates, cfg.hidden, cfg.d, cfg.batch
+    wbytes = 1 if cfg.precision in ("int8", "blocked_fp") else 2
+    w_block = (D + H) * g * bh * wbytes
+    n_tiles = H // bh
+    weights = w_block * (1 if n_tiles == 1 else 2)   # double-buffer if streaming
+    state = (2 * B * H + B * H) * 4                  # h double buffer + c
+    io = B * (D + bh) * 2 * 2
+    scales = 2 * g * bh * 4 + 2 * g * bh * 4
+    return weights + state + io + scales
+
+
+def plan_metrics(cfg: RNNCellConfig, bh: int,
+                 spec: hw.HardwareSpec = hw.DEFAULT) -> Plan:
+    g, H, D, B = cfg.n_gates, cfg.hidden, cfg.d, cfg.batch
+    R = D + H
+    n_tiles = H // bh
+    vmem = tile_vmem_bytes(cfg, bh)
+    resident = vmem <= hw.vmem_budget(spec)
+
+    # --- utilization: 1-D fragmentation on R only (Fig. 4b).  The batch-
+    # padding penalty of the MXU is a *latency* effect (modeled below),
+    # not a fragmentation effect — the paper's Fig. 4 compares tiling
+    # geometries at fixed batch.
+    true_macs = g * H * R
+    padded_macs = g * _pad(H, MXU) * _pad(R, MXU)
+    util = true_macs / padded_macs
+
+    # --- per-step time: three bounds
+    # (1) MXU compute with sublane-padded batch,
+    # (2) VMEM weight streaming — a matvec reads every resident weight
+    #     byte per step, so small-batch serving is VMEM-bandwidth-bound
+    #     (the paper's §4.2 compute:memory-read ratio argument),
+    # (3) HBM streaming when the weights don't fit VMEM.
+    mul_peak = (spec.peak_int8_ops if cfg.precision in ("int8", "blocked_fp")
+                else spec.peak_bf16_flops)
+    compute_s = 2.0 * padded_macs * max(B, SUBLANE) / mul_peak
+    vmem_s = cfg.weight_bytes() / spec.vmem_bw
+    hbm_s = 0.0 if resident else cfg.weight_bytes() / spec.hbm_bw
+    # fixed pipeline overhead per tile (grid step issue + reduction drain),
+    # the 2 + log2(lanes) + 1 cycles of paper §4.1, at ~1 GHz
+    overhead_s = n_tiles * (2 + 7 + 1) / 0.94e9
+    lat = max(compute_s, vmem_s, hbm_s) + overhead_s
+    bound = {compute_s: "compute", vmem_s: "vmem", hbm_s: "hbm"}[
+        max(compute_s, vmem_s, hbm_s)]
+    if overhead_s > max(compute_s, vmem_s, hbm_s):
+        bound = "latency"
+    return Plan(bh=bh, n_tiles=n_tiles, vmem_bytes=vmem, resident=resident,
+                step_latency_s=lat, util=util, bound=bound)
+
+
+def candidate_tiles(H: int) -> List[int]:
+    c = []
+    bh = SUBLANE
+    while bh <= H:
+        if H % bh == 0:
+            c.append(bh)
+        bh *= 2
+    if H not in c and H % SUBLANE == 0:
+        c.append(H)
+    return c or [H]
+
+
+def search(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT
+           ) -> List[Plan]:
+    return [plan_metrics(cfg, bh, spec) for bh in candidate_tiles(cfg.hidden)]
+
+
+def best_plan(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT) -> Plan:
+    plans = [p for p in search(cfg, spec)
+             if p.vmem_bytes <= hw.vmem_budget(spec)]
+    if not plans:  # weights can never be resident; stream with big tiles
+        plans = search(cfg, spec)
+    return min(plans, key=lambda p: p.step_latency_s)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: fragmentation of MVM-tiled vs loop-based designs
+# ---------------------------------------------------------------------------
+
+
+def utilization_loop(H: int, R: int, rv: int = MXU, ru: int = 1) -> float:
+    """Loop-based design: 1-D fragmentation on the reduction dim only."""
+    return R / _pad(R, rv * ru)
+
+
+def utilization_mvm(H: int, R: int, hv: int = 400, rv: int = 40,
+                    ru: int = 6) -> float:
+    """Brainwave-style tiled MVM: 2-D fragmentation on H and R
+    (hv/rv/ru defaults = BW's Stratix-10 configuration, Table 7)."""
+    return (H / _pad(H, hv)) * (R / _pad(R, rv * ru))
+
+
+def fragmentation(H: int, D: Optional[int] = None) -> dict:
+    R = H + (D if D is not None else H)
+    return {
+        "H": H, "R": R,
+        "util_loop": utilization_loop(H, R),
+        "util_mvm_bw": utilization_mvm(H, R),
+    }

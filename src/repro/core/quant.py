@@ -1,0 +1,150 @@
+"""Mixed-precision storage: int8 symmetric quantization and blocked
+floating point.
+
+The paper's precision scheme (§3.3, §4.1): weights live on-chip in 8-bit,
+multiplies run narrow, the reduction tree widens (16-bit first stage) and
+accumulation is 32-bit.  On TPU this maps to int8 HBM/VMEM storage with
+bf16 multiplies and f32 MXU accumulation.  Serving is memory-bound at
+decode, so 8-bit storage directly halves the dominant roofline term —
+the framework exposes it for:
+
+  * weights (``quantize_tree`` over a served param tree),
+  * the KV cache (``quantize_kv``/``dequantize_kv``),
+  * gradient all-reduce compression (:mod:`repro.optim.compression`).
+
+``blocked_fp`` emulates Brainwave's shared-exponent block floating point
+(hv values share a 5-bit exponent) for the DeepBench accuracy comparison.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+INT8_MAX = 127.0
+
+
+def quantize_int8(x: jax.Array, axis: int = -1,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-slice int8 quantization along ``axis``.
+
+    Returns (q int8, scale f32) with x ~= q * scale (scale broadcastable)."""
+    xf = x.astype(F32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(F32) * scale.astype(F32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Weight-tree quantization for serving
+# ---------------------------------------------------------------------------
+
+# Eligibility: matmul weights with a reasonably wide output dim and enough
+# input rows for stable per-channel scales.  Embedding tables stay wide
+# (gather path, accuracy-sensitive); norm scales / biases are 1-D anyway.
+_MIN_OUT_DIM = 256
+_MIN_IN_DIM = 64
+
+
+def should_quantize(path: str, shape, dtype) -> bool:
+    if "embedding" in path:
+        return False
+    return (len(shape) >= 2 and shape[-1] >= _MIN_OUT_DIM
+            and shape[-2] >= _MIN_IN_DIM
+            and jnp.dtype(dtype) in (jnp.dtype(jnp.float32),
+                                     jnp.dtype(jnp.bfloat16)))
+
+
+def quantize_tree(params: Any) -> Any:
+    """Quantize every eligible matmul weight to {q: int8, scale: f32};
+    ineligible leaves are cast to bf16 and stay plain arrays.
+
+    Reduction happens over the *input* (second-to-last) dim so each output
+    channel has its own scale — the layout a W8A16 matvec kernel wants.
+    ``repro.models.layers.wcast`` consumes either form."""
+    def quant_leaf(path, x):
+        name = jax.tree_util.keystr(path)
+        if not should_quantize(name, x.shape, x.dtype):
+            return x.astype(jnp.bfloat16) if jnp.issubdtype(
+                x.dtype, jnp.floating) else x
+        q, scale = quantize_int8(x, axis=-2)
+        return {"q": q, "scale": scale.astype(F32)}
+    return jax.tree_util.tree_map_with_path(quant_leaf, params)
+
+
+def serving_specs(specs: Any, int8: bool = False) -> Any:
+    """Transform a ParamSpec tree into its serving layout: bf16 storage, or
+    {q: int8, scale: f32} dict-leaves for eligible weights when int8."""
+    import dataclasses
+
+    from repro.models import params as pspec
+    is_spec = pspec.is_spec
+
+    def conv(path, s):
+        if not jnp.issubdtype(jnp.dtype(s.dtype), jnp.floating):
+            return s
+        name = jax.tree_util.keystr(path)
+        bf = dataclasses.replace(s, dtype=jnp.bfloat16)
+        if not int8 or not should_quantize(name, s.shape, s.dtype):
+            return bf
+        scale_shape = s.shape[:-2] + (1,) + s.shape[-1:]
+        scale_axes = (tuple(s.axes[:-2]) + (None,) + tuple(s.axes[-1:])
+                      if s.axes else (None,) * len(scale_shape))
+        return {
+            "q": dataclasses.replace(s, dtype=jnp.int8),
+            "scale": pspec.ParamSpec(scale_shape, F32, scale_axes,
+                                     init="ones"),
+        }
+    return jax.tree_util.tree_map_with_path(conv, specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(kv: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(..., hd) tensors: scale per leading index (per token, per head)."""
+    return quantize_int8(kv, axis=-1)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return dequantize_int8(q, scale, jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Blocked floating point (Brainwave emulation, for the accuracy benchmark)
+# ---------------------------------------------------------------------------
+
+
+def blocked_fp(x: jax.Array, block: int = 16, mantissa_bits: int = 4,
+               axis: int = -1) -> jax.Array:
+    """Round to a shared-exponent block format along ``axis``.
+
+    Each block of ``block`` values shares one exponent (max exponent in the
+    block); each value keeps a sign and ``mantissa_bits`` of mantissa."""
+    xf = x.astype(F32)
+    moved = jnp.moveaxis(xf, axis, -1)
+    pad = (-moved.shape[-1]) % block
+    if pad:
+        moved = jnp.concatenate(
+            [moved, jnp.zeros(moved.shape[:-1] + (pad,), F32)], axis=-1)
+    blocks = moved.reshape(moved.shape[:-1] + (-1, block))
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    # shared exponent = floor(log2(amax)); quantize mantissa to m bits
+    exp = jnp.floor(jnp.log2(jnp.maximum(amax, 1e-30)))
+    step = jnp.exp2(exp - (mantissa_bits - 1))
+    q = jnp.round(blocks / step) * step
+    q = q.reshape(moved.shape)
+    if pad:
+        q = q[..., :-pad]
+    return jnp.moveaxis(q, -1, axis).astype(x.dtype)

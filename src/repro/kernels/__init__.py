@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package follows the required structure:
+  <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     — jit'd model-layout wrapper (TPU dispatch / CPU interpret)
+  ref.py     — pure-jnp oracle the tests assert_allclose against
+
+fused_rnn/        the paper's core: fused LSTM/GRU cell, weights VMEM-resident
+flash_attention/  fused attention forward (causal/window/softcap)
+matmul_int8/      W8A16 matmul with fused dequant+bias+activation epilogue
+rwkv_step/        fused RWKV6 serving recurrence (paper's pattern, modern cell)
+"""

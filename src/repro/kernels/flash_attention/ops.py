@@ -1,0 +1,33 @@
+"""Jit'd wrapper: model-layout adapter for the flash attention kernel.
+
+Accepts the model's (B, S, H, hd) layout with separate KV heads and
+dispatches to the Pallas kernel (TPU) or interpret mode (CPU tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, interpret: bool = None):
+    """q (B, S, H, hd); k/v (B, S, K, hd) -> (B, S, H, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(256, S)
+    bk = min(512, S)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          softcap=softcap, bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

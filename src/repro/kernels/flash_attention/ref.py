@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel (naive, materializes the
+full score matrix — small test shapes only)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    B, H, Sq, d = q.shape
+    Skv = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32))
+    s = s / math.sqrt(d)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32)).astype(q.dtype)

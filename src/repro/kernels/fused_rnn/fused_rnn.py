@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: the paper's loop-based fused RNN cell.
+
+The Plasticine mapping (paper §3.3/§4) translated to the TPU memory
+hierarchy (DESIGN.md §Hardware-adaptation):
+
+  Plasticine                         TPU (this kernel)
+  ----------------------------------- -----------------------------------
+  weights resident in PMU scratchpads  weight blocks resident in VMEM; the
+                                       BlockSpec index map is constant in t,
+                                       so Pallas fetches each block from HBM
+                                       once and reuses it for all T steps
+  per-element LSTM-1 dataflow          per-tile fused dataflow: gate dots,
+                                       scale/bias, nonlinearities, c/h
+                                       update in one kernel body (VREGs)
+  hu x ru spatial unrolling            grid dimension over H-tiles (bh) and
+                                       the MXU's 128-lane parallelism (rv)
+  8-bit multiply, 16/32-bit reduce     int8 weight storage, bf16 multiply,
+                                       f32 MXU accumulation
+  recurrent state in registers         h/c carried across grid steps in a
+                                       VMEM scratch accumulator; h is
+                                       double-buffered by t parity so later
+                                       H-tiles of step t still read h_{t-1}
+
+Grid: (T, H/bh), executed sequentially ("arbitrary" semantics) — t-major,
+tile-minor, which is exactly the paper's loop nest in Fig. 5.
+
+Weight layout: w_x (D, G, H), w_h (H, G, H); gate order (i, j, f, o) for
+LSTM, (r, z, n) for GRU.  Scales are per (gate, unit) as produced by
+``repro.core.cells.quantize_weights``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _gates_matmul(x, h_prev, wx_ref, wh_ref, sx_ref, sh_ref, G, bh):
+    """(B,D)x(D,G*bh) + (B,H)x(H,G*bh) with int8->bf16 widening and f32
+    accumulation; returns the two pre-activation halves (B, G, bh)."""
+    B = x.shape[0]
+    wx = wx_ref[...].reshape(wx_ref.shape[0], G * bh)
+    wh = wh_ref[...].reshape(wh_ref.shape[0], G * bh)
+    zx = jax.lax.dot_general(
+        x.astype(jnp.bfloat16), wx.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    zh = jax.lax.dot_general(
+        h_prev.astype(jnp.bfloat16), wh.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    zx = zx.reshape(B, G, bh) * sx_ref[...]
+    zh = zh.reshape(B, G, bh) * sh_ref[...]
+    return zx, zh
+
+
+def _lstm_kernel(x_ref, wx_ref, wh_ref, sx_ref, sh_ref, b_ref,
+                 h0_ref, c0_ref,
+                 y_ref, hT_ref, cT_ref,
+                 h_scr, c_scr, *, bh: int):
+    t = pl.program_id(0)
+    hb = pl.program_id(1)
+    T = pl.num_programs(0)
+
+    @pl.when((t == 0) & (hb == 0))
+    def _init():
+        h_scr[0] = h0_ref[...].astype(F32)
+        h_scr[1] = h0_ref[...].astype(F32)
+        c_scr[...] = c0_ref[...].astype(F32)
+
+    cur = jax.lax.rem(t, 2)
+    h_prev = h_scr[cur]                                    # (B, H)
+    x = x_ref[0]                                           # (B, D)
+    G = 4
+    zx, zh = _gates_matmul(x, h_prev, wx_ref, wh_ref, sx_ref, sh_ref, G, bh)
+    z = zx + zh + b_ref[...]
+    i = jax.nn.sigmoid(z[:, 0])
+    j = jnp.tanh(z[:, 1])
+    f = jax.nn.sigmoid(z[:, 2])
+    o = jax.nn.sigmoid(z[:, 3])
+
+    sl = pl.ds(hb * bh, bh)
+    c_old = c_scr[:, sl]
+    c_new = f * c_old + i * j
+    h_new = o * jnp.tanh(c_new)
+    c_scr[:, sl] = c_new
+    h_scr[1 - cur, :, sl] = h_new                          # next step's h
+    y_ref[0] = h_new.astype(y_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _final():
+        hT_ref[...] = h_new.astype(hT_ref.dtype)
+        cT_ref[...] = c_new.astype(cT_ref.dtype)
+
+
+def _gru_kernel(x_ref, wx_ref, wh_ref, sx_ref, sh_ref, bx_ref, bh_ref,
+                h0_ref,
+                y_ref, hT_ref,
+                h_scr, *, bh: int):
+    t = pl.program_id(0)
+    hb = pl.program_id(1)
+    T = pl.num_programs(0)
+
+    @pl.when((t == 0) & (hb == 0))
+    def _init():
+        h_scr[0] = h0_ref[...].astype(F32)
+        h_scr[1] = h0_ref[...].astype(F32)
+
+    cur = jax.lax.rem(t, 2)
+    h_prev = h_scr[cur]
+    x = x_ref[0]
+    G = 3
+    zx, zh = _gates_matmul(x, h_prev, wx_ref, wh_ref, sx_ref, sh_ref, G, bh)
+    zx = zx + bx_ref[...]
+    zh = zh + bh_ref[...]
+    r = jax.nn.sigmoid(zx[:, 0] + zh[:, 0])
+    z = jax.nn.sigmoid(zx[:, 1] + zh[:, 1])
+    n = jnp.tanh(zx[:, 2] + r * zh[:, 2])
+
+    sl = pl.ds(hb * bh, bh)
+    h_old = jax.lax.dynamic_slice_in_dim(h_prev, hb * bh, bh, axis=1)
+    h_new = (1 - z) * n + z * h_old
+    h_scr[1 - cur, :, sl] = h_new
+    y_ref[0] = h_new.astype(y_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _final():
+        hT_ref[...] = h_new.astype(hT_ref.dtype)
+
+
+def _specs(D: int, H: int, G: int, B: int, bh: int):
+    """BlockSpecs shared by both cells.  Weight index maps are constant in
+    t, so weight blocks are HBM-fetched once and stay VMEM-resident across
+    all time steps (the paper's on-chip-weights requirement)."""
+    return dict(
+        x=pl.BlockSpec((1, B, D), lambda t, h: (t, 0, 0)),
+        wx=pl.BlockSpec((D, G, bh), lambda t, h: (0, 0, h)),
+        wh=pl.BlockSpec((H, G, bh), lambda t, h: (0, 0, h)),
+        s=pl.BlockSpec((G, bh), lambda t, h: (0, h)),
+        state=pl.BlockSpec((B, H), lambda t, h: (0, 0)),
+        y=pl.BlockSpec((1, B, bh), lambda t, h: (t, 0, h)),
+        out_state=pl.BlockSpec((B, bh), lambda t, h: (0, h)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def fused_lstm(x_seq, w_x, w_h, s_x, s_h, b, h0, c0, *,
+               bh: int = 256, interpret: bool = False):
+    """x_seq (T, B, D); w_x (D, 4, H) int8/bf16; s_* (4, H) f32; b (4, H);
+    h0/c0 (B, H).  Returns (y (T, B, H) bf16, h_T (B, H) f32, c_T)."""
+    T, B, D = x_seq.shape
+    H = w_h.shape[0]
+    bh = min(bh, H)
+    assert H % bh == 0, (H, bh)
+    sp = _specs(D, H, 4, B, bh)
+    return pl.pallas_call(
+        functools.partial(_lstm_kernel, bh=bh),
+        grid=(T, H // bh),
+        in_specs=[sp["x"], sp["wx"], sp["wh"], sp["s"], sp["s"], sp["s"],
+                  sp["state"], sp["state"]],
+        out_specs=[sp["y"], sp["out_state"], sp["out_state"]],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, B, H), jnp.bfloat16),
+            jax.ShapeDtypeStruct((B, H), F32),
+            jax.ShapeDtypeStruct((B, H), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, B, H), F32),
+            pltpu.VMEM((B, H), F32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="fused_lstm",
+    )(x_seq, w_x, w_h, s_x, s_h, b, h0, c0)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def fused_gru(x_seq, w_x, w_h, s_x, s_h, b_x, b_h, h0, *,
+              bh: int = 256, interpret: bool = False):
+    """x_seq (T, B, D); w_x (D, 3, H); s_* (3, H); b_* (3, H); h0 (B, H).
+    Returns (y (T, B, H) bf16, h_T (B, H) f32)."""
+    T, B, D = x_seq.shape
+    H = w_h.shape[0]
+    bh = min(bh, H)
+    assert H % bh == 0, (H, bh)
+    sp = _specs(D, H, 3, B, bh)
+    return pl.pallas_call(
+        functools.partial(_gru_kernel, bh=bh),
+        grid=(T, H // bh),
+        in_specs=[sp["x"], sp["wx"], sp["wh"], sp["s"], sp["s"], sp["s"],
+                  sp["s"], sp["state"]],
+        out_specs=[sp["y"], sp["out_state"]],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, B, H), jnp.bfloat16),
+            jax.ShapeDtypeStruct((B, H), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((2, B, H), F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="fused_gru",
+    )(x_seq, w_x, w_h, s_x, s_h, b_x, b_h, h0)

@@ -1,0 +1,64 @@
+"""Jit'd wrappers dispatching RNNCellConfig workloads onto the fused
+Pallas kernels (TPU) or their interpret-mode execution (CPU validation).
+
+``serve`` is the entry point used by ``repro.core.cells.serve(...,
+impl="kernel")`` and the DeepBench benchmark harness.  Block size bh comes
+from the DSE (repro.core.dse) unless overridden.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_rnn.fused_rnn import fused_gru, fused_lstm
+
+F32 = jnp.float32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _weights_for_kernel(cfg, w: Dict) -> Tuple:
+    """Split quantized/unquantized weight dicts into kernel operands."""
+    s_x = w.get("w_x_scale")
+    s_h = w.get("w_h_scale")
+    wx, wh = w["w_x"], w["w_h"]
+    if s_x is None:
+        wx = wx.astype(jnp.bfloat16)
+        s_x = jnp.ones(w["b"].shape, F32)
+    if s_h is None:
+        wh = wh.astype(jnp.bfloat16)
+        s_h = jnp.ones(w["b"].shape, F32)
+    return wx, wh, s_x, s_h
+
+
+def serve(cfg, w: Dict, x_seq: jax.Array, *, bh: int = 0,
+          state: Optional[Tuple[jax.Array, ...]] = None,
+          interpret: Optional[bool] = None) -> jax.Array:
+    """Run T serving steps through the fused kernel.  x_seq (T, B, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not bh:
+        from repro.core.dse import best_plan
+        bh = best_plan(cfg).bh
+    T, B, D = x_seq.shape
+    H = cfg.hidden
+    wx, wh, s_x, s_h = _weights_for_kernel(cfg, w)
+    if state is None:
+        h0 = jnp.zeros((B, H), F32)
+        c0 = jnp.zeros((B, H), F32)
+    else:
+        h0 = state[0]
+        c0 = state[1] if len(state) > 1 else jnp.zeros((B, H), F32)
+    if cfg.cell == "lstm":
+        y, _, _ = fused_lstm(x_seq, wx, wh, s_x, s_h, w["b"], h0, c0,
+                             bh=bh, interpret=interpret)
+    else:
+        y, _ = fused_gru(x_seq, wx, wh, s_x, s_h, w["b"],
+                         w.get("b_h", jnp.zeros_like(w["b"])), h0,
+                         bh=bh, interpret=interpret)
+    return y

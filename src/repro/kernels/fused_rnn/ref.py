@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the fused RNN kernels.
+
+Mathematically identical to the kernel: int8 weights widened through the
+same per-(gate, unit) scales, bf16 multiplies, f32 accumulation, identical
+gate order.  The kernel tests sweep shapes/dtypes and assert_allclose
+against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _widen(w, s):
+    """int8/bf16 weight (R, G, H) x scale (G, H) -> effective f32 weight."""
+    w = w.astype(F32)
+    if s is not None:
+        w = w * s[None]
+    return w
+
+
+def _z(x, h, w_x, w_h, s_x, s_h):
+    """Pre-activations (B, G, H) with bf16 multiply / f32 accumulate to
+    match the kernel's numerics."""
+    zx = jnp.einsum("bd,dgh->bgh", x.astype(jnp.bfloat16),
+                    w_x.astype(jnp.bfloat16), preferred_element_type=F32)
+    zh = jnp.einsum("bd,dgh->bgh", h.astype(jnp.bfloat16),
+                    w_h.astype(jnp.bfloat16), preferred_element_type=F32)
+    if s_x is not None:
+        zx = zx * s_x[None]
+    if s_h is not None:
+        zh = zh * s_h[None]
+    return zx, zh
+
+
+def fused_lstm_ref(x_seq, w_x, w_h, s_x, s_h, b, h0, c0):
+    wxf = w_x.astype(jnp.bfloat16) if s_x is None else w_x
+    whf = w_h.astype(jnp.bfloat16) if s_h is None else w_h
+
+    def step(carry, x):
+        h, c = carry
+        zx, zh = _z(x, h, wxf, whf, s_x, s_h)
+        z = zx + zh + b[None]
+        i = jax.nn.sigmoid(z[:, 0])
+        j = jnp.tanh(z[:, 1])
+        f = jax.nn.sigmoid(z[:, 2])
+        o = jax.nn.sigmoid(z[:, 3])
+        c_new = f * c + i * j
+        h_new = o * jnp.tanh(c_new)
+        return (h_new, c_new), h_new.astype(jnp.bfloat16)
+
+    (hT, cT), ys = jax.lax.scan(step, (h0.astype(F32), c0.astype(F32)), x_seq)
+    return ys, hT, cT
+
+
+def fused_gru_ref(x_seq, w_x, w_h, s_x, s_h, b_x, b_h, h0):
+    def step(h, x):
+        zx, zh = _z(x, h, w_x, w_h, s_x, s_h)
+        zx = zx + b_x[None]
+        zh = zh + b_h[None]
+        r = jax.nn.sigmoid(zx[:, 0] + zh[:, 0])
+        z = jax.nn.sigmoid(zx[:, 1] + zh[:, 1])
+        n = jnp.tanh(zx[:, 2] + r * zh[:, 2])
+        h_new = (1 - z) * n + z * h
+        return h_new, h_new.astype(jnp.bfloat16)
+
+    hT, ys = jax.lax.scan(step, h0.astype(F32), x_seq)
+    return ys, hT

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the W8A16 matmul: accepts the framework's quantized
+leaf convention ({"q": int8 (K, N), "scale": f32 (1, N)}) directly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul_int8.matmul_int8 import matmul_w8a16
+
+
+def qdot(x, leaf, bias=None, *, act: str = "none", interpret=None):
+    """x (..., K) @ quantized leaf -> (..., N)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K).astype(jnp.bfloat16)
+    out = matmul_w8a16(x2, leaf["q"], leaf["scale"].reshape(-1), bias,
+                       act=act, interpret=interpret)
+    return out.reshape(*lead, -1)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the W8A16 matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+_EPILOGUES = {
+    "none": lambda x: x,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def matmul_w8a16_ref(x, w_q, scale, bias=None, *, act: str = "none"):
+    out = jax.lax.dot_general(
+        x.astype(jnp.bfloat16), w_q.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    out = out * scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return _EPILOGUES[act](out).astype(jnp.bfloat16)

@@ -1,0 +1,27 @@
+"""Jit'd wrapper: model-layout adapter for the fused RWKV6 step kernel.
+
+Consumes the rwkv block's projections ((B, T, d) flat) and drives the
+kernel in the (T, B, H, K) layout; used by the serving path on TPU and
+validated in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_step.rwkv_step import rwkv6_step
+
+
+def serve_wkv(r, k, v, w_log, u, state, *, head_dim: int = 64,
+              interpret=None):
+    """r/k/v/w_log: (B, T, d); u: (d,); state: (B, H, hd, hd) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T, d = r.shape
+    H = d // head_dim
+    to = lambda x: x.reshape(B, T, H, head_dim).transpose(1, 0, 2, 3)
+    y, state = rwkv6_step(to(r), to(k), to(v), to(w_log),
+                          u.reshape(H, head_dim), state,
+                          interpret=interpret)
+    return y.transpose(1, 0, 2, 3).reshape(B, T, d), state

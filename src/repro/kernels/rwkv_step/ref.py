@@ -1,0 +1,22 @@
+"""Oracle for the fused RWKV6 step kernel: the framework's own
+``linear_attention_step`` scanned over tokens."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recurrence import linear_attention_step
+
+F32 = jnp.float32
+
+
+def rwkv6_step_ref(r, k, v, w_log, u, state):
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs
+        y, S = linear_attention_step(S, rt, kt, vt, wt,
+                                     convention="exclusive", u=u)
+        return S, y.astype(jnp.bfloat16)
+
+    state, ys = jax.lax.scan(step, state.astype(F32), (r, k, v, w_log))
+    return ys, state

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused RWKV6 serving step (the paper's LSTM-1
+pattern on the modern recurrent cell).
+
+One kernel evaluates, per (batch, head) tile, the whole wkv recurrence for
+a token:
+
+    y   = r . (S + (u * k) v^T)
+    S' <- diag(w) S + k v^T
+
+with the state S resident in VMEM across the grid and every intermediate
+(outer product, bonus read) in registers — no (K, V)-sized tensor ever
+round-trips HBM, which is exactly the paper's cross-kernel-fusion claim
+applied to RWKV serving.  Multi-token serving loops this kernel over a
+grid t-axis with the state carried in the output buffer (in/out aliased).
+
+Layouts: r/k/w (T, B, H, K); v (T, B, H, V); u (H, K); state (B, H, K, V).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+            y_ref, sT_ref, s_scr):
+    t = pl.program_id(0)
+    T = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = s0_ref[...].astype(F32)        # (B, H, K, V)
+
+    r = r_ref[0].astype(F32)                        # (B, H, K)
+    k = k_ref[0].astype(F32)
+    w = w_ref[0].astype(F32)                        # log-decay, <= 0
+    v = v_ref[0].astype(F32)                        # (B, H, V)
+    u = u_ref[...].astype(F32)                      # (H, K)
+
+    S = s_scr[...]
+    kv = k[..., None] * v[:, :, None, :]            # (B, H, K, V)
+    read = S + u[None, :, :, None] * kv
+    y = jnp.sum(r[..., None] * read, axis=2)        # (B, H, V)
+    s_scr[...] = jnp.exp(w)[..., None] * S + kv
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _final():
+        sT_ref[...] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_step(r, k, v, w_log, u, state, *, interpret: bool = False):
+    """Serve T tokens through the fused recurrence.
+
+    r/k/w_log: (T, B, H, K); v: (T, B, H, V); u: (H, K);
+    state: (B, H, K, V) f32.  Returns (y (T, B, H, V) bf16, state')."""
+    T, B, H, K = r.shape
+    V = v.shape[-1]
+    step = pl.BlockSpec((1, B, H, K), lambda t: (t, 0, 0, 0))
+    stepv = pl.BlockSpec((1, B, H, V), lambda t: (t, 0, 0, 0))
+    full = pl.BlockSpec((B, H, K, V), lambda t: (0, 0, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(T,),
+        in_specs=[step, step, stepv, step,
+                  pl.BlockSpec((H, K), lambda t: (0, 0)), full],
+        out_specs=[stepv, full],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, B, H, V), jnp.bfloat16),
+            jax.ShapeDtypeStruct((B, H, K, V), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B, H, K, V), F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="rwkv6_step",
+    )(r, k, v, w_log, u, state)

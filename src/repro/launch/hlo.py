@@ -1,0 +1,115 @@
+"""Post-SPMD HLO text analysis: collective inventory and byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but no collective
+traffic, so we parse the optimized (per-device) HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Two numbers are derived per op:
+
+  * ``operand_bytes`` — the literal operand size (spec definition),
+  * ``ici_bytes``     — ring-algorithm bytes actually serialized on a
+                         device's links (2(g-1)/g x for all-reduce, etc.),
+    which is what the collective roofline term uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-broadcast)"
+    r"(?P<suffix>-start)?\(")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int        # per-device result bytes
+    group_size: int
+    operand_bytes: int    # per-device operand bytes
+    ici_bytes: int        # ring-model bytes serialized per device
+    line: str
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ITOA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        entries = [e for e in m.group(1).split(",") if e.strip()]
+        return max(1, len(entries))
+    if "collective-permute" in line:
+        return 2
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion of a -start op already counted
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("op")
+        out_bytes = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        if kind == "all-reduce":
+            operand = out_bytes
+            ici = int(2 * (g - 1) / g * out_bytes)
+        elif kind == "all-gather":
+            operand = out_bytes // max(1, g)
+            ici = int((g - 1) / g * out_bytes)
+        elif kind == "reduce-scatter":
+            operand = out_bytes * g
+            ici = int((g - 1) / g * operand)
+        elif kind == "all-to-all":
+            operand = out_bytes
+            ici = int((g - 1) / g * out_bytes)
+        else:  # collective-permute / broadcast
+            operand = out_bytes
+            ici = out_bytes
+        ops.append(CollectiveOp(kind, out_bytes, g, operand, ici,
+                                line.strip()[:200]))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    summary: Dict[str, float] = {
+        "n_ops": len(ops),
+        "operand_bytes": float(sum(o.operand_bytes for o in ops)),
+        "ici_bytes": float(sum(o.ici_bytes for o in ops)),
+    }
+    by_kind: Dict[str, float] = {}
+    for o in ops:
+        by_kind[o.kind] = by_kind.get(o.kind, 0.0) + o.ici_bytes
+    summary["by_kind"] = by_kind  # type: ignore[assignment]
+    return summary

@@ -1,0 +1,149 @@
+"""Assemble the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ARCH_ORDER = [
+    "qwen2.5-14b", "gemma2-9b", "gemma3-12b", "starcoder2-15b",
+    "whisper-tiny", "rwkv6-1.6b", "qwen2-vl-2b", "granite-moe-1b-a400m",
+    "qwen3-moe-30b-a3b", "hymba-1.5b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(directory: str) -> Dict[str, dict]:
+    cells = {}
+    for path in glob.glob(os.path.join(directory, "*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        key = (d["arch"], d["shape"], d["mesh"],
+               d.get("int8", False), d.get("kv_int8", False))
+        cells[key] = d
+    return cells
+
+
+def fmt_bytes(n: Optional[float]) -> str:
+    if n is None:
+        return "-"
+    return f"{n/2**30:.2f}"
+
+
+def dryrun_table(cells: Dict) -> List[str]:
+    rows = ["| arch | shape | mesh | compile | per-chip args GiB | "
+            "per-chip temp GiB | HLO flops/dev | collectives (ici GiB/dev) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                c = cells.get((arch, shape, mesh, False, False))
+                if c is None:
+                    rows.append(f"| {arch} | {shape} | {mesh} | MISSING |  |  |  |  |")
+                    continue
+                if c.get("skip"):
+                    rows.append(f"| {arch} | {shape} | {mesh} | skip* |  |  |  |  |")
+                    continue
+                if not c.get("ok"):
+                    err = str(c.get("error", ""))[:40]
+                    rows.append(f"| {arch} | {shape} | {mesh} | **FAIL** {err} |  |  |  |  |")
+                    continue
+                m = c["full"].get("memory", {})
+                coll = c["full"]["collectives"]
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | ok ({c['wall_s']:.0f}s) "
+                    f"| {fmt_bytes(m.get('argument_bytes'))} "
+                    f"| {fmt_bytes(m.get('temp_bytes'))} "
+                    f"| {c['full']['flops']:.3g} "
+                    f"| {coll['n_ops']} ops, {coll['ici_bytes']/2**30:.2f} |")
+    return rows
+
+
+def serve_mem_floor_s(arch: str, shape: str) -> Optional[float]:
+    """Analytic per-device byte floor for serving cells: weight shard read
+    once per step + cache shard read+write once (bf16 baseline)."""
+    from repro.configs import get_config, get_shape
+    from repro.models import params as pspec
+    from repro.models.lm import build_model
+
+    cfg = get_config(arch)
+    sh = get_shape(shape)
+    if sh.mode == "train":
+        return None
+    model = build_model(cfg)
+    w_bytes = pspec.tree_size(model.param_specs()) * 2 / 16  # bf16, TP=16
+    floor = w_bytes
+    if sh.mode == "decode":
+        cache = pspec.tree_bytes(
+            model.cache_specs(sh.global_batch, sh.seq_len)) / 256
+        floor += 2 * cache
+    return floor / 819e9
+
+
+def roofline_table(cells: Dict) -> List[str]:
+    rows = ["| arch | shape | compute s | memory s | collective s (1-link) | "
+            "dominant | MODEL_FLOPS | useful | roofline-frac | mem-floor s | note |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            c = cells.get((arch, shape, "pod16x16", False, False))
+            if c is None:
+                continue
+            if c.get("skip"):
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — "
+                            f"| — | skip: sub-quadratic rule |")
+                continue
+            r = c.get("roofline")
+            if not c.get("ok") or not r:
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — "
+                            f"| — | {str(c.get('error','no pieces'))[:40]} |")
+                continue
+            try:
+                floor = serve_mem_floor_s(arch, shape)
+            except Exception:  # noqa: BLE001
+                floor = None
+            floor_s = f"{floor:.4g}" if floor else "—"
+            rows.append(
+                f"| {arch} | {shape} | {r['compute_s']:.4g} "
+                f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+                f"| **{r['dominant']}** | {r['model_flops_total']:.3g} "
+                f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} "
+                f"| {floor_s} | {note_for(c, r)} |")
+    return rows
+
+
+def note_for(c: dict, r: dict) -> str:
+    dom = r["dominant"]
+    if dom == "collective":
+        return "cut collective: fewer/cheaper weight gathers or int8 wire"
+    if dom == "memory":
+        return "cut bytes: int8 weights / int8 KV / fusion"
+    return "compute-bound: at the MXU roofline"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default=None, help="write markdown to file")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    lines = ["## §Dry-run (generated by repro.launch.report)", ""]
+    lines += dryrun_table(cells)
+    lines += ["", "## §Roofline (single-pod, per-device seconds)", ""]
+    lines += roofline_table(cells)
+    text = "\n".join(lines)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline term computation (TPU v5e target).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes are assembled from compiled cost pieces: XLA counts a
+``while`` body once, so the dry-run lowers the scanned layer period (and
+stem, and optimizer) separately and scales each piece by its trip count —
+``total = sum_i piece_i x mult_i``.  ``cost_analysis`` numbers are
+per-device; globals multiply by chip count, and the spec formulas divide it
+back out, so the terms are per-device seconds either way.
+
+``collective_bytes`` uses the ring-model ICI bytes per device
+(launch/hlo.py); the term divides by the single-link bandwidth per the
+assignment formula (a 1-link worst case; v5e has 4 usable links, so the
+achievable term is up to 4x lower — both are recorded).
+
+MODEL_FLOPS follows the PaLM convention: 6·N_matmul·tokens (+ exact
+attention-window term), N counted from the *actual* parameter tree with
+MoE experts scaled to the active top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+
+from repro import hw
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import params as pspec
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS from the real parameter tree
+# ---------------------------------------------------------------------------
+
+
+def matmul_param_count(model) -> float:
+    """Matmul-visible params: >=2-D leaves; embedding gathers excluded;
+    tied embeddings count once (as the lm_head matmul); MoE experts scaled
+    by top_k / n_experts."""
+    cfg: ModelConfig = model.cfg
+    specs = model.param_specs()
+    total = 0.0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=pspec.is_spec)[0]:
+        name = jax.tree_util.keystr(path)
+        if len(spec.shape) < 2:
+            continue
+        n = float(spec.size)
+        if "embedding" in name:
+            if not cfg.tie_embeddings:
+                continue  # pure gather; untied head counted separately
+            # tied: the table is also the head matmul -> count once
+        if "/moe/" in name.replace("']['", "/") or "moe" in name and \
+                any(w in name for w in ("w_up", "w_down", "w_gate")):
+            if cfg.moe is not None and spec.shape and \
+                    spec.shape[0] == cfg.n_periods and \
+                    len(spec.shape) >= 3 and spec.shape[1] == cfg.moe.n_experts:
+                n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+    return total
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeSpec, fwd_only: bool) -> float:
+    """Score+AV flops: 4 * S_visible * q_heads * head_dim per token/layer."""
+    if not any(k in ("attn", "local", "swa_ssm") for k in cfg.layer_pattern):
+        return 0.0
+    H, hd = cfg.n_heads, cfg.head_dim_
+    total = 0.0
+    per_period = cfg.layer_pattern
+    if shape.mode == "decode":
+        cache = shape.seq_len
+        for kind in per_period * cfg.n_periods:
+            if kind == "attn":
+                vis = cache
+            elif kind in ("local", "swa_ssm"):
+                vis = min(cfg.local_window, cache)
+            else:
+                continue
+            total += 4.0 * vis * H * hd * shape.global_batch
+    else:
+        S = shape.seq_len
+        for kind in per_period * cfg.n_periods:
+            if kind == "attn":
+                vis = S / 2.0  # causal average
+            elif kind in ("local", "swa_ssm"):
+                vis = min(cfg.local_window, S)
+            else:
+                continue
+            total += 4.0 * vis * H * hd * shape.tokens
+    if not fwd_only:
+        total *= 3.0
+    return total
+
+
+def model_flops(model, shape: ShapeSpec) -> float:
+    n_mm = matmul_param_count(model)
+    if shape.mode == "train":
+        tokens = shape.tokens
+        return 6.0 * n_mm * tokens + attention_flops(model.cfg, shape, False)
+    if shape.mode == "prefill":
+        return 2.0 * n_mm * shape.tokens + attention_flops(model.cfg, shape, True)
+    return 2.0 * n_mm * shape.global_batch + attention_flops(model.cfg, shape, True)
+
+
+# ---------------------------------------------------------------------------
+# Terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device totals assembled from the cost pieces
+    flops_device: float
+    bytes_device: float
+    coll_ici_bytes_device: float
+    coll_operand_bytes_device: float
+    # terms, seconds
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    collective_s_4link: float = 0.0
+    dominant: str = ""
+    model_flops_total: float = 0.0
+    useful_ratio: float = 0.0
+    step_s: float = 0.0          # max of terms = roofline step time
+    roofline_frac: float = 0.0   # model-flops MFU at the roofline step time
+    note: str = ""
+
+    def finalize(self, spec: hw.HardwareSpec = hw.TPU_V5E) -> "RooflineResult":
+        self.compute_s = self.flops_device / spec.peak_bf16_flops
+        self.memory_s = self.bytes_device / spec.hbm_bw
+        self.collective_s = self.coll_ici_bytes_device / spec.ici_link_bw
+        self.collective_s_4link = self.collective_s / spec.ici_links
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        self.step_s = max(terms.values())
+        hlo_total = self.flops_device * self.chips
+        self.useful_ratio = (self.model_flops_total / hlo_total
+                             if hlo_total else 0.0)
+        ideal_s = self.model_flops_total / (self.chips * spec.peak_bf16_flops)
+        self.roofline_frac = ideal_s / self.step_s if self.step_s else 0.0
+        return self
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)

@@ -1,0 +1,10 @@
+"""Model zoo package.  ``LM`` / ``build_model`` are re-exported lazily to
+keep ``repro.models.params`` importable from the sharding layer without a
+circular import."""
+
+
+def __getattr__(name):
+    if name in ("LM", "build_model"):
+        from repro.models import lm
+        return getattr(lm, name)
+    raise AttributeError(name)

@@ -1,0 +1,273 @@
+"""Block assembly: one function per layer *kind*.
+
+Kinds (ModelConfig.layer_pattern entries):
+  "attn"     — global attention + MLP (or MoE when cfg.moe is set)
+  "local"    — sliding-window attention + MLP/MoE; ring-buffer KV cache
+  "swa_ssm"  — hymba hybrid: parallel sliding-window attention + SSD heads,
+               outputs mean-fused after per-path norm, then MLP
+  "rwkv"     — rwkv6 time-mix + channel-mix (handles its own norms)
+
+Every block is a pure function (params, x, cache) -> (x, cache, aux) so the
+layer-stack scan, the per-period cost piece of the roofline analyzer, and
+the smoke tests all share one implementation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant import dequantize_kv, quantize_kv
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dot, mlp, mlp_specs, rmsnorm
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig, kind: str, cross: bool = False
+                ) -> Dict[str, ParamSpec]:
+    if kind == "rwkv":
+        return rwkv_lib.rwkv_specs(cfg)
+    d = cfg.d_model
+    norm = lambda: ParamSpec((d,), jnp.float32, (None,), init="zeros")
+    specs: Dict[str, object] = {
+        "norm1": norm(),
+        "norm2": norm(),
+        "attn": attn.attention_specs(cfg),
+    }
+    if cfg.moe is not None:
+        specs["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+    if kind == "swa_ssm":
+        specs["ssm"] = ssm_lib.ssm_specs(cfg)
+        specs["attn_out_norm"] = norm()
+        specs["ssm_out_norm"] = norm()
+    if cross:
+        specs["norm_cross"] = norm()
+        specs["cross"] = attn.attention_specs(cfg)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# KV-cache entry helpers (bf16 or int8 storage)
+# ---------------------------------------------------------------------------
+
+
+def _kv_store_dtype(cfg: ModelConfig):
+    return jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+
+
+def _encode_kv(cfg: ModelConfig, k, v):
+    """(B,S,K,hd) -> cache arrays (+ scales when int8)."""
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {"k": kq, "v": vq, "k_scale": ks[..., 0], "v_scale": vs[..., 0]}
+    return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+
+def _decode_kv(cfg: ModelConfig, entry):
+    if cfg.kv_cache_dtype == "int8":
+        k = dequantize_kv(entry["k"], entry["k_scale"][..., None])
+        v = dequantize_kv(entry["v"], entry["v_scale"][..., None])
+        return k, v
+    return entry["k"], entry["v"]
+
+
+def attn_cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     as_specs: bool = True) -> Dict[str, ParamSpec]:
+    """ParamSpec tree for one attention cache entry (pre-stacking)."""
+    n = attn.cache_slot_count(cfg, kind, max_len)
+    K, hd = cfg.n_kv_heads, cfg.head_dim_
+    seq_ax = "window" if n < max_len else "cache_seq"
+    dt = _kv_store_dtype(cfg)
+    entry = {
+        "k": ParamSpec((batch, n, K, hd), dt,
+                       ("batch", seq_ax, "kv_heads", None), init="zeros"),
+        "v": ParamSpec((batch, n, K, hd), dt,
+                       ("batch", seq_ax, "kv_heads", None), init="zeros"),
+        "pos": ParamSpec((batch, n), jnp.int32, ("batch", seq_ax),
+                         init="custom",
+                         custom_init=lambda k, s: -jnp.ones(s.shape, s.dtype)),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        entry["k_scale"] = ParamSpec((batch, n, K), jnp.float32,
+                                     ("batch", seq_ax, "kv_heads"), init="ones")
+        entry["v_scale"] = ParamSpec((batch, n, K), jnp.float32,
+                                     ("batch", seq_ax, "kv_heads"), init="ones")
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (shared by attn / local / swa_ssm kinds)
+# ---------------------------------------------------------------------------
+
+
+def _attn_seq(params, x, cfg: ModelConfig, sharder, positions, *,
+              window: int, mode: str, causal: bool = True, max_len: int = 0):
+    """Full-sequence attention.  Returns (out, cache_entry_or_None)."""
+    B, S, _ = x.shape
+    q, k, v = attn.project_qkv(params, x, cfg, sharder, positions)
+    pos2d = positions if positions.ndim == 2 else positions[:, 0]
+    out = attn.flash_attention(
+        q, k, v, pos2d, pos2d, cfg=cfg, sharder=sharder, causal=causal,
+        window=window)
+    out = out.reshape(B, S, cfg.q_dim)
+    out = dot(out, params["wo"])
+    entry = None
+    if mode == "prefill":
+        n_slots = min(window, max_len or S) if window else (max_len or S)
+        kc, vc, pc = attn.fill_cache_from_prefill(k, v, n_slots)
+        entry = _encode_kv(cfg, kc, vc)
+        entry["pos"] = pc.astype(jnp.int32)
+    return out, entry
+
+
+def _attn_step(params, x, cfg: ModelConfig, sharder, lengths, cache, *,
+               window: int, positions=None):
+    """One-token attention over the cache.  x: (B, 1, d)."""
+    B = x.shape[0]
+    pos = positions if positions is not None else lengths[:, None]
+    q, k, v = attn.project_qkv(params, x, cfg, sharder, pos)
+    n_slots = cache["k"].shape[1]
+    ring = window > 0 and n_slots <= window
+    new_kv = _encode_kv(cfg, k, v)
+    idx = lengths % n_slots if ring else jnp.minimum(lengths, n_slots - 1)
+    b = jnp.arange(B)
+    entry = dict(cache)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name in entry:
+            entry[name] = entry[name].at[b, idx].set(new_kv[name][:, 0])
+    entry["pos"] = entry["pos"].at[b, idx].set(lengths.astype(jnp.int32))
+    kc, vc = _decode_kv(cfg, entry)
+    out = attn.decode_attention(
+        q[:, 0], kc, vc, entry["pos"], lengths, cfg=cfg, sharder=sharder,
+        causal=True, window=window)
+    out = out.reshape(B, 1, cfg.q_dim)
+    out = dot(out.astype(x.dtype), params["wo"])
+    return out, entry
+
+
+def _cross_attn(params, x, cfg: ModelConfig, sharder, *, enc_out=None,
+                cache=None, mode: str):
+    """Encoder-decoder cross attention.  Caches projected enc k/v."""
+    B, S, _ = x.shape
+    if cache is not None and "xk" in cache:
+        k, v = cache["xk"], cache["xv"]
+    else:
+        Se = enc_out.shape[1]
+        kf = dot(enc_out, params["wk"])
+        vf = dot(enc_out, params["wv"])
+        k = kf.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim_)
+        v = vf.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim_)
+    qf = dot(x, params["wq"])
+    q = qf.reshape(B, S, cfg.n_heads, cfg.head_dim_)
+    Se = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    if mode == "decode":
+        out = attn.decode_attention(
+            q[:, 0], k.astype(jnp.bfloat16), v.astype(jnp.bfloat16), kv_pos,
+            jnp.full((B,), Se, jnp.int32), cfg=cfg, sharder=sharder,
+            causal=False, window=0)
+        out = out.reshape(B, 1, cfg.q_dim)
+    else:
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        out = attn.flash_attention(
+            q, k, v, q_pos, kv_pos, cfg=cfg, sharder=sharder, causal=False,
+            window=0)
+        out = out.reshape(B, S, cfg.q_dim)
+    out = dot(out.astype(x.dtype), params["wo"])
+    entry = {"xk": k.astype(jnp.bfloat16), "xv": v.astype(jnp.bfloat16)} \
+        if mode == "prefill" else None
+    return out, entry
+
+
+# ---------------------------------------------------------------------------
+# Full blocks
+# ---------------------------------------------------------------------------
+
+
+def _ffn(params, h, cfg: ModelConfig, sharder):
+    if cfg.moe is not None:
+        return moe_lib.moe_mlp(params["moe"], h, cfg, sharder)
+    return mlp(params["mlp"], h, cfg, sharder), jnp.zeros((), F32)
+
+
+def apply_block(params, x, cfg: ModelConfig, kind: str, sharder, *,
+                positions=None, lengths=None, mode: str = "train",
+                cache: Optional[Dict] = None, enc_out=None,
+                causal: bool = True, max_len: int = 0):
+    """Returns (x, new_cache_entry, aux_loss)."""
+    if kind == "rwkv":
+        x, new_cache = rwkv_lib.rwkv_block(params, x, cfg, sharder,
+                                           mode=mode, cache=cache)
+        if mode == "train":
+            new_cache = None
+        return x, new_cache, jnp.zeros((), F32)
+
+    window = cfg.local_window if kind in ("local", "swa_ssm") else 0
+    new_cache: Dict = {}
+    h = rmsnorm(x, params["norm1"], cfg.norm_eps)
+
+    if kind == "swa_ssm":
+        sub_attn = {k2: cache[k2] for k2 in ("k", "v", "pos", "k_scale",
+                                             "v_scale") if cache and k2 in cache} \
+            if cache else None
+        sub_ssm = {k2: cache[k2] for k2 in ("conv_state", "ssd_state")} \
+            if cache else None
+        if mode == "decode":
+            a_out, a_cache = _attn_step(params["attn"], h, cfg, sharder,
+                                        lengths, sub_attn, window=window)
+        else:
+            a_out, a_cache = _attn_seq(params["attn"], h, cfg, sharder,
+                                       positions, window=window, mode=mode,
+                                       causal=causal, max_len=max_len)
+        s_out, s_cache = ssm_lib.ssm_mixer(params["ssm"], h, cfg, sharder,
+                                           mode=mode, cache=sub_ssm)
+        fused = 0.5 * (rmsnorm(a_out, params["attn_out_norm"], cfg.norm_eps)
+                       + rmsnorm(s_out, params["ssm_out_norm"], cfg.norm_eps))
+        x = x + fused
+        if a_cache:
+            new_cache.update(a_cache)
+        if s_cache and mode != "train":
+            new_cache.update(s_cache)
+    else:
+        if mode == "decode":
+            a_out, a_cache = _attn_step(params["attn"], h, cfg, sharder,
+                                        lengths, cache, window=window,
+                                        positions=positions)
+        else:
+            a_out, a_cache = _attn_seq(params["attn"], h, cfg, sharder,
+                                       positions, window=window, mode=mode,
+                                       causal=causal, max_len=max_len)
+        x = x + a_out
+        if a_cache:
+            new_cache.update(a_cache)
+
+    if "cross" in params:
+        hc = rmsnorm(x, params["norm_cross"], cfg.norm_eps)
+        c_out, c_cache = _cross_attn(params["cross"], hc, cfg, sharder,
+                                     enc_out=enc_out, cache=cache, mode=mode)
+        x = x + c_out
+        if c_cache:
+            new_cache.update(c_cache)
+        elif cache is not None and "xk" in cache:
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+
+    h = rmsnorm(x, params["norm2"], cfg.norm_eps)
+    f_out, aux = _ffn(params, h, cfg, sharder)
+    x = x + f_out
+    return x, (new_cache if mode != "train" else None), aux

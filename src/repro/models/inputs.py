@@ -1,0 +1,71 @@
+"""Abstract input construction for every (architecture x shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins (weak-type
+correct, shardable, no device allocation) together with their logical axes
+— the same pattern the dry-run lowers against.  ``make_batch`` materializes
+a concrete random batch of the same structure for smoke tests and
+examples.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, Tuple]]:
+    """Returns (abstract batch, logical axes per entry) for train/prefill.
+
+    Decode-mode inputs are the (token, lengths) pair plus the cache, whose
+    specs come from ``LM.cache_specs``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Tuple] = {}
+    if shape.mode == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    elif shape.mode == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        axes["tokens"] = ("batch",)
+
+    if cfg.is_encoder_decoder and shape.mode in ("train", "prefill"):
+        se = S // cfg.encoder_downsample
+        specs["frames"] = jax.ShapeDtypeStruct((B, se, cfg.d_model),
+                                               jnp.bfloat16)
+        axes["frames"] = ("batch", "seq", None)
+    if cfg.m_rope_sections and shape.mode in ("train", "prefill"):
+        specs["positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32)
+        axes["positions"] = ("batch", None, "seq")
+    return specs, axes
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0
+               ) -> Dict[str, jax.Array]:
+    """Concrete random batch matching ``input_specs`` (host-side numpy)."""
+    rng = np.random.default_rng(seed)
+    specs, _ = input_specs(cfg, shape)
+    batch = {}
+    for name, s in specs.items():
+        if name in ("tokens",):
+            batch[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, s.shape), jnp.int32)
+        elif name == "positions":
+            B, _, S = s.shape
+            pos = np.broadcast_to(np.arange(S), (B, 3, S))
+            batch[name] = jnp.asarray(pos, jnp.int32)
+        elif name == "frames":
+            batch[name] = jnp.asarray(
+                rng.standard_normal(s.shape, np.float32), jnp.bfloat16)
+        else:
+            raise KeyError(name)
+    return batch

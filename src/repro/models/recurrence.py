@@ -1,0 +1,151 @@
+"""Chunked linear-attention / SSM recurrence.
+
+Both recurrent families in the assigned grid reduce to the same affine
+state recurrence over a (K x V) state S with per-step decay d_t:
+
+    S_t = diag(d_t) S_{t-1} + k_t v_t^T          y_t = q_t . S_{t'}
+
+RWKV6 reads S_{t-1} plus a "bonus" diagonal term (u), per-channel decay;
+the SSD-form SSM (Mamba2-style) reads S_t, scalar-per-head decay.  Both are
+evaluated in a *chunked* closed form that never builds a while loop:
+
+  * within a chunk: decays become cumulative log-sums; scores are a masked
+    (q*exp(c_i)) @ (k*exp(-c_j))^T matmul.  Cumulative logs are clamped at
+    ``-LOG_CLAMP`` — clamping preserves *differences* once both ends are
+    clamped, so the only error is in coefficients below exp(-LOG_CLAMP),
+    which are numerically zero anyway.
+  * across chunks: per-chunk (decay D_c, increment A_c) pairs are combined
+    with ``jax.lax.associative_scan`` over the affine monoid
+    (D1,A1) o (D2,A2) = (D2*D1, D2*A1 + A2).
+
+This is the TPU-native adaptation of the paper's "keep the recurrent state
+in registers" insight: the state chain is the only sequential dependence
+and it is log-depth; everything else is dense MXU work (DESIGN.md
+§Hardware-adaptation).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+LOG_CLAMP = 30.0
+
+
+def _affine_combine(a, b):
+    d1, s1 = a
+    d2, s2 = b
+    return d1 * d2, d2[..., None] * s1 + s2
+
+
+def chunked_linear_attention(
+    q: jax.Array,                 # (B, H, T, K)
+    k: jax.Array,                 # (B, H, T, K)
+    v: jax.Array,                 # (B, H, T, V)
+    log_decay: jax.Array,         # (B, H, T, K) or (B, H, T, 1); <= 0
+    *,
+    chunk: int,
+    convention: str,              # "exclusive" (rwkv) | "inclusive" (ssd)
+    u: Optional[jax.Array] = None,        # (H, K) rwkv bonus
+    initial_state: Optional[jax.Array] = None,   # (B, H, K, V)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, H, T, V), final_state (B, H, K, V))."""
+    B, H, T, K = q.shape
+    V = v.shape[-1]
+    T_real = T
+    chunk = max(1, chunk)
+    pad = (-T) % chunk
+    if pad:
+        # zero-pad the tail: padded steps have decay 1 and k = 0, so they
+        # leave the state untouched; their outputs are sliced away below.
+        zpad = lambda x: jnp.concatenate(
+            [x, jnp.zeros(x.shape[:2] + (pad,) + x.shape[3:], x.dtype)], axis=2)
+        q, k, v, log_decay = zpad(q), zpad(k), zpad(v), zpad(log_decay)
+        T = T + pad
+    n_c, n = T // chunk, chunk
+
+    ch = lambda x: x.reshape(B, H, n_c, n, x.shape[-1])
+    qc, kc, vc = ch(q.astype(F32)), ch(k.astype(F32)), ch(v.astype(F32))
+    lw = ch(log_decay.astype(F32))                       # (B,H,nc,n,Kd)
+    lw = jnp.broadcast_to(lw, (B, H, n_c, n, K)) if lw.shape[-1] == 1 else lw
+
+    c_inc = jnp.cumsum(lw, axis=3)                       # inclusive cumsum
+    c_exc = c_inc - lw                                   # exclusive
+    cq = c_exc if convention == "exclusive" else c_inc
+    cqc = jnp.maximum(cq, -LOG_CLAMP)
+    ckc = jnp.maximum(c_inc, -LOG_CLAMP)
+
+    qd = qc * jnp.exp(cqc)
+    kd = kc * jnp.exp(-ckc)
+
+    # ---- intra-chunk scores -------------------------------------------------
+    scores = jnp.einsum("bhcik,bhcjk->bhcij", qd, kd,
+                        preferred_element_type=F32)
+    i_idx = jnp.arange(n)[:, None]
+    j_idx = jnp.arange(n)[None, :]
+    mask = (j_idx < i_idx) if convention == "exclusive" else (j_idx <= i_idx)
+    scores = jnp.where(mask, scores, 0.0)
+    y = jnp.einsum("bhcij,bhcjv->bhciv", scores, vc,
+                   preferred_element_type=F32)
+    if u is not None:  # rwkv bonus: the diagonal reads (u*k_i) instead of S
+        diag = jnp.einsum("bhcik,hk,bhcik->bhci", qc, u.astype(F32), kc)
+        y = y + diag[..., None] * vc
+
+    # ---- chunk summaries ----------------------------------------------------
+    total = c_inc[:, :, :, -1, :]                        # (B,H,nc,K)
+    rc = jnp.maximum(total[:, :, :, None, :] - c_inc, -LOG_CLAMP)
+    kt = kc * jnp.exp(rc)
+    A = jnp.einsum("bhcjk,bhcjv->bhckv", kt, vc,
+                   preferred_element_type=F32)           # (B,H,nc,K,V)
+    D = jnp.exp(total)                                   # (B,H,nc,K)
+
+    # ---- inter-chunk state chain (log-depth, no while loop) ----------------
+    Dcum, Acum = jax.lax.associative_scan(_affine_combine, (D, A), axis=2)
+    S_init = (jnp.zeros((B, H, K, V), F32) if initial_state is None
+              else initial_state.astype(F32))
+    # state entering chunk c = effect of chunks [0, c) applied to S_init
+    S_in = Dcum[..., None] * S_init[:, :, None] + Acum    # state AFTER chunk c
+    S_enter = jnp.concatenate(
+        [S_init[:, :, None], S_in[:, :, :-1]], axis=2)    # (B,H,nc,K,V)
+
+    y = y + jnp.einsum("bhcik,bhckv->bhciv", qd, S_enter,
+                       preferred_element_type=F32)
+    final = S_in[:, :, -1]
+    y = y.reshape(B, H, T, V)
+    if pad:
+        y = y[:, :, :T_real]
+    return y, final
+
+
+def linear_attention_step(
+    state: jax.Array,             # (B, H, K, V)
+    q: jax.Array,                 # (B, H, K)
+    k: jax.Array,                 # (B, H, K)
+    v: jax.Array,                 # (B, H, V)
+    log_decay: jax.Array,         # (B, H, K) or (B, H, 1)
+    *,
+    convention: str,
+    u: Optional[jax.Array] = None,        # (H, K)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence (decode).  Returns (y (B,H,V), new_state).
+
+    This is the paper's fused serving step: projections feed the state
+    update and readout with all intermediates register-resident.
+    """
+    state = state.astype(F32)
+    q, k, v = q.astype(F32), k.astype(F32), v.astype(F32)
+    d = jnp.exp(jnp.broadcast_to(log_decay.astype(F32), k.shape))
+    kv = k[..., None] * v[..., None, :]                   # (B,H,K,V)
+    if convention == "exclusive":
+        read = state + (u.astype(F32)[None, :, :, None] * kv
+                        if u is not None else 0.0)
+        new_state = d[..., None] * state + kv
+    else:  # inclusive (ssd)
+        new_state = d[..., None] * state + kv
+        read = new_state
+    y = jnp.einsum("bhk,bhkv->bhv", q, read)
+    return y, new_state

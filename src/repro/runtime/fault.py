@@ -1,0 +1,114 @@
+"""Fault tolerance primitives for thousand-node runs.
+
+  * :class:`PreemptionGuard` — converts SIGTERM/SIGINT (maintenance events,
+    spot reclaims) into a cooperative flag the train loop polls; the loop
+    checkpoints and exits cleanly instead of dying mid-step.
+  * :class:`StepWatchdog` — a heartbeat monitor: if no step completes
+    within ``timeout_s`` (hung collective, straggling host), it invokes
+    ``on_stall`` (default: log + record), which a supervisor (the launcher
+    script / k8s liveness probe) uses to restart the job from the latest
+    checkpoint.  This is the standard straggler/hang mitigation for
+    synchronous SPMD: detect-and-restart, since a synchronous step cannot
+    outrun its slowest participant.
+  * :func:`retry` — exponential backoff for transient infrastructure
+    errors (checkpoint storage, compilation cache, DNS).
+"""
+
+from __future__ import annotations
+
+import logging
+import signal
+import threading
+import time
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.runtime")
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._flag = threading.Event()
+        self._prev = {}
+        self._signals = signals
+
+    def __enter__(self) -> "PreemptionGuard":
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+
+    def _handler(self, signum, frame) -> None:
+        log.warning("preemption signal %s received; requesting clean stop",
+                    signum)
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+
+class StepWatchdog:
+    """Call ``beat()`` after every completed step; a background thread
+    fires ``on_stall`` if beats stop arriving."""
+
+    def __init__(self, timeout_s: float = 600.0,
+                 on_stall: Optional[Callable[[float], None]] = None,
+                 poll_s: float = 5.0):
+        self.timeout_s = timeout_s
+        self.on_stall = on_stall or self._default_on_stall
+        self.poll_s = poll_s
+        self._last = time.monotonic()
+        self._stop = threading.Event()
+        self._stalled = False
+        self._thread: Optional[threading.Thread] = None
+
+    def _default_on_stall(self, idle_s: float) -> None:
+        log.error("watchdog: no step completed for %.0fs — likely hung "
+                  "collective or straggler; supervisor should restart from "
+                  "the latest checkpoint", idle_s)
+
+    def beat(self) -> None:
+        self._last = time.monotonic()
+        self._stalled = False
+
+    @property
+    def stalled(self) -> bool:
+        return self._stalled
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            idle = time.monotonic() - self._last
+            if idle > self.timeout_s and not self._stalled:
+                self._stalled = True
+                self.on_stall(idle)
+
+    def __enter__(self) -> "StepWatchdog":
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join()
+
+
+def retry(fn: Callable, *, tries: int = 5, base_delay_s: float = 0.5,
+          exceptions=(OSError, IOError), on_retry=None):
+    """Run fn() with exponential backoff on transient errors."""
+    delay = base_delay_s
+    for attempt in range(tries):
+        try:
+            return fn()
+        except exceptions as e:  # noqa: PERF203
+            if attempt == tries - 1:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            log.warning("retry %d/%d after %s: %s", attempt + 1, tries,
+                        type(e).__name__, e)
+            time.sleep(delay)
+            delay *= 2

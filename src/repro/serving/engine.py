@@ -1,0 +1,139 @@
+"""Slot-based continuous-batching serving engine.
+
+The batched decode step (one jit-compiled program, fixed max_batch) runs
+every tick over all occupied slots; requests join by prefilling into a free
+slot and leave on EOS/length without disturbing the others — the standard
+continuous-batching scheme (Orca/vLLM) on a fixed-slot KV cache.  Slot
+insertion is a pytree scatter into the batch axis of the stacked cache.
+
+This engine is the transformer-serving analogue of the paper's real-time
+RNN serving scenario (batch-of-1 requests arriving asynchronously) and is
+exercised end-to-end by examples/serve_lm.py and the integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import logging
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import Sharder
+from repro.models.lm import LM
+from repro.serving.sampler import SamplerConfig, sample
+
+log = logging.getLogger("repro.serving")
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: LM, params, sharder: Sharder, *,
+                 max_batch: int = 4, max_len: int = 128,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+        self.model = model
+        self.params = params
+        self.sharder = sharder
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler
+        self.cache = model.init_cache(max_batch, max_len)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.next_token = np.zeros((max_batch,), np.int32)
+        self.queue: deque[Request] = deque()
+        self._uid = itertools.count()
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, sharder),
+            donate_argnums=1)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, sharder, max_len=max_len))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+        self.queue.append(req)
+        return req
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.step():
+                break
+
+    # ----------------------------------------------------------------- ticks
+    def step(self) -> bool:
+        """One engine tick: admit pending requests, one batched decode.
+        Returns False when idle."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return bool(self.queue)
+        tokens = jnp.asarray(self.next_token)
+        self.cache, logits = self._decode(self.params, self.cache, tokens)
+        self._key, sub = jax.random.split(self._key)
+        sampled = np.asarray(sample(logits, sub, self.sampler))
+        lengths = np.asarray(self.cache["lengths"])
+        for i in active:
+            req = self.slots[i]
+            tok = int(sampled[i])
+            req.output.append(tok)
+            self.next_token[i] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            full = lengths[i] >= self.max_len - 1
+            if hit_eos or full or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None
+        return True
+
+    # ------------------------------------------------------------- internals
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # keep at least one prompt token; decode stops at max_len anyway
+            keep = max(1, self.max_len - req.max_new_tokens - 1)
+            prompt = req.prompt[:keep]
+            batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+            if self.model.cfg.m_rope_sections:
+                S = len(prompt)
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32), (1, 3, S))
+            cache1, logits1 = self._prefill(self.params, batch)
+            self._insert_slot(i, cache1)
+            self._key, sub = jax.random.split(self._key)
+            first = int(np.asarray(sample(logits1, sub, self.sampler))[0])
+            req.output.append(first)
+            self.next_token[i] = first
+            self.slots[i] = req
+
+    def _insert_slot(self, slot: int, cache1) -> None:
+        """Scatter a batch-1 prefill cache into slot ``slot``."""
+        def ins(big, small):
+            return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+        self.cache["blocks"] = jax.tree.map(ins, self.cache["blocks"],
+                                            cache1["blocks"])
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(
+            cache1["lengths"][0])
+
+    # ------------------------------------------------------------- telemetry
+    def stats(self) -> Dict[str, int]:
+        return {
+            "active": sum(r is not None for r in self.slots),
+            "queued": len(self.queue),
+        }

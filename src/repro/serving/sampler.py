@@ -1,0 +1,27 @@
+"""Token samplers (pure functions of logits + rng)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 -> greedy
+    top_k: int = 0                # 0 -> disabled
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           cfg: SamplerConfig = SamplerConfig()) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,95 @@
+"""The training loop: data + step + checkpoint + fault tolerance.
+
+Wires every substrate piece together; this is what
+``python -m repro.launch.train`` runs and what ``examples/train_lm.py``
+demonstrates end-to-end on CPU with a reduced config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data import SyntheticLMData
+from repro.dist.sharding import Sharder
+from repro.models.lm import LM
+from repro.optim import AdamW, cosine_schedule
+from repro.optim.adamw import init_state
+from repro.runtime import PreemptionGuard, StepWatchdog
+from repro.train.step import make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    seed: int = 0
+    watchdog_timeout_s: float = 3600.0
+    async_checkpoint: bool = True
+
+
+def train(model: LM, shape: ShapeSpec, sharder: Sharder,
+          loop_cfg: TrainLoopConfig,
+          opt: Optional[AdamW] = None,
+          metrics_cb: Optional[Callable[[int, Dict], None]] = None):
+    """Runs the loop; returns (state, history)."""
+    cfg = model.cfg
+    opt = opt or AdamW(lr=cosine_schedule(3e-4, 100, loop_cfg.total_steps))
+    step_fn = jax.jit(make_train_step(model, opt, sharder), donate_argnums=0)
+    data = SyntheticLMData(cfg, shape, seed=loop_cfg.seed)
+
+    ckpt = (CheckpointManager(loop_cfg.checkpoint_dir)
+            if loop_cfg.checkpoint_dir else None)
+    state = None
+    start_step = 0
+    if ckpt and ckpt.latest_step() is not None:
+        abstract = init_state(model.param_specs(), jax.random.PRNGKey(0))
+        state = ckpt.restore(abstract)
+        start_step = ckpt.manifest(ckpt.latest_step())["extra"]["data_step"]
+        data.restore({"step": start_step, "seed": loop_cfg.seed})
+        log.info("restored checkpoint at data step %d", start_step)
+    if state is None:
+        state = init_state(model.param_specs(),
+                           jax.random.PRNGKey(loop_cfg.seed))
+
+    history = []
+    with PreemptionGuard() as guard, \
+            StepWatchdog(loop_cfg.watchdog_timeout_s) as watchdog:
+        for step in range(start_step, loop_cfg.total_steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in
+                     data.batch_at(step).items()}
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time_s"] = time.time() - t0
+            watchdog.beat()
+            history.append(metrics)
+            if metrics_cb:
+                metrics_cb(step, metrics)
+            if step % loop_cfg.log_every == 0:
+                log.info("step %d loss=%.4f grad_norm=%.3f %.2fs", step,
+                         metrics["loss"], metrics.get("grad_norm", 0.0),
+                         metrics["step_time_s"])
+            stop = guard.should_stop
+            if ckpt and (stop or (step + 1) % loop_cfg.checkpoint_every == 0
+                         or step + 1 == loop_cfg.total_steps):
+                ckpt.save(step + 1, state,
+                          extra={"data_step": step + 1},
+                          blocking=not loop_cfg.async_checkpoint)
+            if stop:
+                log.warning("preempted: exiting cleanly at step %d", step)
+                break
+    if ckpt:
+        ckpt.wait()
+    return state, history

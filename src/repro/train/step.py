@@ -1,0 +1,70 @@
+"""The jitted train step: microbatched grad accumulation + AdamW.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches — required
+to fit the 4k x 256 global batch of the large architectures under 16 GB of
+HBM per chip (saved activations scale with the *micro*batch).  The roofline
+analyzer accounts for the scan trip counts through the cost-piece
+decomposition (launch/dryrun.py), never through the full artifact.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import Sharder
+from repro.models.lm import LM
+from repro.optim.adamw import AdamW, TrainState, adamw_update
+
+F32 = jnp.float32
+
+
+def microbatch(batch: Dict[str, jax.Array], n_micro: int) -> Dict[str, jax.Array]:
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: LM, opt: AdamW, sharder: Sharder,
+                    grad_transform: Optional[Callable] = None
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    cfg = model.cfg
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, sharder)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        n_micro = cfg.n_microbatches
+        params = state["params"]
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = microbatch(batch, n_micro)
+
+            def micro(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(F32), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (grads, loss_sum), metric_hist = jax.lax.scan(
+                micro, (g0, jnp.zeros((), F32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metric_hist)
+        if grad_transform is not None:  # e.g. compressed DP all-reduce
+            grads = grad_transform(grads)
+        new_state, opt_metrics = adamw_update(opt, state, grads)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

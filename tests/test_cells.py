@@ -1,0 +1,90 @@
+"""The paper's cell implementations: BLAS vs loop-based-fused equivalence,
+precision transforms, DSE invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import hw
+from repro.core import dse
+from repro.core.cells import (
+    RNNCellConfig,
+    dequantize_weights,
+    init_weights,
+    quantize_weights,
+    serve,
+)
+from repro.configs import DEEPBENCH_TASKS
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+@pytest.mark.parametrize("H,B,T", [(64, 1, 7), (128, 3, 5)])
+def test_blas_equals_fused(cell, H, B, T, key):
+    """Identical math, different execution models (paper Fig. 1 vs Fig. 3)."""
+    cfg = RNNCellConfig(cell, H, timesteps=T, batch=B, precision="f32")
+    w = init_weights(cfg, key)
+    x = jax.random.normal(jax.random.fold_in(key, 7), (T, B, H))
+    y_blas = serve(cfg, w, x, impl="blas")
+    y_fused = serve(cfg, w, x, impl="fused")
+    np.testing.assert_allclose(np.asarray(y_blas), np.asarray(y_fused),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16", "blocked_fp"])
+def test_low_precision_close_to_f32(precision, key):
+    cfg = RNNCellConfig("lstm", 128, timesteps=6, batch=1,
+                        precision=precision)
+    w = init_weights(cfg, key)
+    wq = quantize_weights(cfg, w)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (6, 1, 128))
+    y32 = serve(RNNCellConfig("lstm", 128, timesteps=6, precision="f32"),
+                w, x, impl="fused")
+    yq = serve(cfg, wq, x, impl="fused")
+    # bounded-state cell: quantization error stays small through time
+    assert float(jnp.max(jnp.abs(yq - y32))) < 0.05
+
+
+def test_dequantize_roundtrip(key):
+    cfg = RNNCellConfig("gru", 64, precision="int8")
+    w = init_weights(cfg, key)
+    wq = quantize_weights(cfg, w)
+    wd = dequantize_weights(wq)
+    for name in ("w_x", "w_h"):
+        amax = float(jnp.max(jnp.abs(w[name])))
+        assert float(jnp.max(jnp.abs(wd[name] - w[name]))) <= amax / 127 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# DSE
+# ---------------------------------------------------------------------------
+
+
+def test_dse_plans_respect_vmem():
+    for task in DEEPBENCH_TASKS:
+        cfg = RNNCellConfig(task.cell, task.hidden, timesteps=task.timesteps)
+        plan = dse.best_plan(cfg)
+        assert plan.bh >= 8 and cfg.hidden % plan.bh == 0
+        assert plan.vmem_bytes <= hw.vmem_budget() or not plan.resident
+
+
+def test_dse_utilization_beats_mvm_tiling():
+    """Paper Fig. 4: loop-based 1-D fragmentation dominates BW's 2-D
+    fragmentation on every DeepBench size."""
+    for task in DEEPBENCH_TASKS:
+        f = dse.fragmentation(task.hidden)
+        assert f["util_loop"] >= f["util_mvm_bw"], f
+    # and the gap is large for small problems (the paper's 30x case)
+    small = dse.fragmentation(256)
+    assert small["util_loop"] / small["util_mvm_bw"] > 1.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(h_exp=st.integers(5, 12))
+def test_dse_latency_monotone_in_hidden(h_exp):
+    """Bigger problems are never modeled faster (sanity of the cost model)."""
+    H = 2 ** h_exp
+    small = dse.best_plan(RNNCellConfig("lstm", H))
+    big = dse.best_plan(RNNCellConfig("lstm", 2 * H))
+    assert big.step_latency_s >= small.step_latency_s * 0.99

@@ -1,0 +1,122 @@
+"""Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles,
+interpret=True on CPU (assignment deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cells import RNNCellConfig, init_weights, quantize_weights
+from repro.core.quant import quantize_int8
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_rnn import ops as rnn_ops
+from repro.kernels.fused_rnn import ref as rnn_ref
+from repro.kernels.matmul_int8.matmul_int8 import matmul_w8a16
+from repro.kernels.matmul_int8.ref import matmul_w8a16_ref
+
+
+# ---------------------------------------------------------------------------
+# fused RNN
+# ---------------------------------------------------------------------------
+
+RNN_SWEEP = [
+    ("lstm", 128, 1, 4, "int8", 64),
+    ("lstm", 256, 2, 3, "int8", 128),
+    ("lstm", 256, 1, 3, "bf16", 256),
+    ("lstm", 512, 4, 2, "int8", 128),
+    ("gru", 128, 1, 4, "int8", 128),
+    ("gru", 256, 2, 3, "bf16", 64),
+    ("gru", 512, 1, 2, "int8", 512),
+]
+
+
+@pytest.mark.parametrize("cell,H,B,T,prec,bh", RNN_SWEEP)
+def test_fused_rnn_vs_ref(cell, H, B, T, prec, bh):
+    cfg = RNNCellConfig(cell, H, timesteps=T, batch=B, precision=prec)
+    w = quantize_weights(cfg, init_weights(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, B, cfg.d), jnp.bfloat16)
+    y = rnn_ops.serve(cfg, w, x, bh=bh, interpret=True)
+    wx, wh, sx, sh = rnn_ops._weights_for_kernel(cfg, w)
+    h0 = jnp.zeros((B, H))
+    if cell == "lstm":
+        y_ref, _, _ = rnn_ref.fused_lstm_ref(x, wx, wh, sx, sh, w["b"], h0, h0)
+    else:
+        y_ref, _ = rnn_ref.fused_gru_ref(
+            x, wx, wh, sx, sh, w["b"], w.get("b_h", jnp.zeros_like(w["b"])), h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_fused_lstm_state_carry():
+    """Final (h, c) outputs equal the oracle's final state."""
+    cfg = RNNCellConfig("lstm", 128, timesteps=6, batch=2, precision="bf16")
+    w = quantize_weights(cfg, init_weights(cfg, jax.random.PRNGKey(2)))
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, 2, 128), jnp.bfloat16)
+    wx, wh, sx, sh = rnn_ops._weights_for_kernel(cfg, w)
+    from repro.kernels.fused_rnn.fused_rnn import fused_lstm
+    h0 = jnp.zeros((2, 128))
+    y, hT, cT = fused_lstm(x, wx, wh, sx, sh, w["b"], h0, h0, bh=64,
+                           interpret=True)
+    y_ref, hT_ref, cT_ref = rnn_ref.fused_lstm_ref(x, wx, wh, sx, sh,
+                                                   w["b"], h0, h0)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               atol=1e-2, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(cT), np.asarray(cT_ref),
+                               atol=1e-2, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_SWEEP = [
+    (1, 2, 256, 64, True, 0, 0.0, jnp.bfloat16),
+    (2, 1, 256, 64, True, 64, 0.0, jnp.bfloat16),
+    (1, 2, 512, 128, True, 0, 50.0, jnp.bfloat16),
+    (1, 1, 256, 64, False, 0, 0.0, jnp.bfloat16),
+    (1, 2, 256, 64, True, 0, 0.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,H,S,d,causal,win,cap,dtype", FLASH_SWEEP)
+def test_flash_attention_vs_ref(B, H, S, d, causal, win, cap, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, S, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=win, softcap=cap,
+                          bq=128, bk=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# W8A16 matmul
+# ---------------------------------------------------------------------------
+
+MM_SWEEP = [
+    (128, 256, 512, "none", None),
+    (256, 512, 256, "silu", True),
+    (128, 128, 128, "gelu", True),
+    (512, 256, 128, "relu", None),
+]
+
+
+@pytest.mark.parametrize("M,K,N,act,with_bias", MM_SWEEP)
+def test_matmul_w8a16_vs_ref(M, K, N, act, with_bias):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) / np.sqrt(K)
+    wq, sc = quantize_int8(w, axis=0)
+    b = (jax.random.normal(jax.random.fold_in(key, 2), (N,)) * 0.1
+         if with_bias else None)
+    out = matmul_w8a16(x, wq, sc[0], b, act=act, bm=128, bn=128, bk=128,
+                       interpret=True)
+    ref = matmul_w8a16_ref(x, wq, sc[0], b, act=act)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)

@@ -1,0 +1,87 @@
+"""Property tests for the mixed-precision storage layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    blocked_fp,
+    dequantize_int8,
+    quantize_int8,
+    quantize_tree,
+    serving_specs,
+)
+from repro.models.params import ParamSpec, tree_abstract
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(2, 65),
+    cols=st.integers(2, 65),
+    axis=st.sampled_from([0, 1, -1]),
+    scale_exp=st.integers(-8, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_int8_roundtrip_error_bound(rows, cols, axis, scale_exp, seed):
+    """|x - deq(q(x))| <= amax / 127 per quantization slice, any scale."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, cols)) * 2.0 ** scale_exp).astype(
+        np.float32)
+    q, scale = quantize_int8(jnp.asarray(x), axis=axis)
+    deq = np.asarray(dequantize_int8(q, scale, jnp.float32))
+    amax = np.max(np.abs(x), axis=axis, keepdims=True)
+    bound = np.maximum(amax, 1e-8) / 127.0 * 0.5001 + 1e-8
+    assert np.all(np.abs(deq - x) <= bound + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=st.sampled_from([4, 16, 32]), mant=st.integers(2, 6),
+       seed=st.integers(0, 2**16))
+def test_blocked_fp_error_scales_with_mantissa(block, mant, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, 50)).astype(np.float32)
+    y = np.asarray(blocked_fp(jnp.asarray(x), block=block,
+                              mantissa_bits=mant, axis=-1))
+    # error bounded by the block's shared-exponent quantization step
+    xb = np.pad(x, ((0, 0), (0, (-x.shape[1]) % block)))
+    blocks = xb.reshape(8, -1, block)
+    amax = np.max(np.abs(blocks), axis=-1, keepdims=True)
+    step = 2.0 ** (np.floor(np.log2(np.maximum(amax, 1e-30))) - (mant - 1))
+    err = np.abs(blocks - np.pad(y, ((0, 0), (0, (-x.shape[1]) % block))
+                                 ).reshape(8, -1, block))
+    assert np.all(err <= step * 0.5001 + 1e-7)
+
+
+def test_quantize_tree_and_serving_specs_align():
+    """quantize_tree output structure == serving_specs(int8) abstract
+    structure, so serving in_shardings line up."""
+    specs = {
+        "big": ParamSpec((128, 512), jnp.float32, ("embed", "mlp")),
+        "norm": ParamSpec((512,), jnp.float32, (None,)),
+        "embedding": ParamSpec((1024, 128), jnp.float32, ("vocab", "embed")),
+    }
+    params = {
+        "big": jnp.ones((128, 512)),
+        "norm": jnp.ones((512,)),
+        "embedding": jnp.ones((1024, 128)),
+    }
+    q = quantize_tree(params)
+    s = tree_abstract(serving_specs(specs, int8=True))
+    assert jax.tree_util.tree_structure(q) == jax.tree_util.tree_structure(s)
+    assert q["big"]["q"].dtype == jnp.int8
+    assert q["norm"].dtype == jnp.bfloat16
+    assert q["embedding"].dtype == jnp.bfloat16  # embeddings stay wide
+    # shapes match the abstract serving tree
+    chk = jax.tree.map(lambda a, b: a.shape == b.shape, q, s)
+    assert all(jax.tree.leaves(chk))
+
+
+def test_wcast_dequantizes_within_bound():
+    from repro.models.layers import wcast
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((256, 300)), jnp.float32)
+    q = quantize_tree({"w": w})["w"]
+    deq = wcast(q, jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=0)
+    assert float(jnp.max(jnp.abs(deq - w) / (amax / 127.0 + 1e-9))) < 0.51

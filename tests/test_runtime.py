@@ -1,0 +1,60 @@
+"""Fault-tolerance primitives."""
+
+import os
+import signal
+import time
+
+import pytest
+
+from repro.runtime import PreemptionGuard, StepWatchdog, retry
+
+
+def test_watchdog_detects_stall_and_recovers():
+    events = []
+    with StepWatchdog(timeout_s=0.2, poll_s=0.05,
+                      on_stall=lambda idle: events.append(idle)) as wd:
+        wd.beat()
+        time.sleep(0.5)
+        assert wd.stalled
+        wd.beat()
+        assert not wd.stalled
+    assert events and events[0] >= 0.2
+
+
+def test_watchdog_quiet_while_beating():
+    events = []
+    with StepWatchdog(timeout_s=0.5, poll_s=0.05,
+                      on_stall=lambda idle: events.append(idle)) as wd:
+        for _ in range(6):
+            wd.beat()
+            time.sleep(0.05)
+    assert not events
+
+
+def test_preemption_guard_sets_flag():
+    with PreemptionGuard(signals=(signal.SIGUSR1,)) as guard:
+        assert not guard.should_stop
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.05)
+        assert guard.should_stop
+
+
+def test_retry_succeeds_after_transient_failures():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry(flaky, tries=5, base_delay_s=0.01) == "ok"
+    assert calls["n"] == 3
+
+
+def test_retry_raises_after_exhaustion():
+    def always_fails():
+        raise OSError("permanent")
+
+    with pytest.raises(OSError):
+        retry(always_fails, tries=2, base_delay_s=0.01)
