@@ -1,0 +1,85 @@
+"""Minimal ``hypothesis`` fallback for environments without the package.
+
+The test-suite uses a small, closed subset of hypothesis — ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``sampled_from`` / ``booleans`` / ``floats`` strategies.
+When the real package is unavailable (this repo installs no extra deps),
+``tests/conftest.py`` installs this stub, which replays each property test
+over ``max_examples`` deterministic pseudo-random draws seeded from the
+test's qualified name.  No shrinking, no database — a failing example's
+kwargs are in the assertion traceback.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_max_examples", 10)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the strategy-drawn params so pytest doesn't treat them as
+        # fixtures (the real hypothesis does the same)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategies])
+        wrapper._stub_target = fn
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        # works in either decorator order: reach through a @given wrapper
+        getattr(fn, "_stub_target", fn)._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats"):
+        setattr(strategies, name, globals()[name])
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,34 @@
+"""Version-compat shims for jax API renames, shared by every user.
+
+The repo targets current jax but must run on older toolchains (the pinned
+image ships 0.4.x); each rename is bridged exactly once here.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check off, across the top-level
+    (>= 0.6, ``check_vma``) and experimental (older, ``check_rep``) APIs."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def tpu_compiler_params():
+    """The Pallas-TPU compiler-params dataclass: ``CompilerParams`` on
+    current jax, ``TPUCompilerParams`` before the rename.  Raises at import
+    time (not at first kernel call) when neither exists."""
+    from jax.experimental.pallas import tpu as pltpu
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")

@@ -86,10 +86,18 @@ def plan_metrics(cfg: RNNCellConfig, bh: int,
     # fixed pipeline overhead per tile (grid step issue + reduction drain),
     # the 2 + log2(lanes) + 1 cycles of paper §4.1, at ~1 GHz
     overhead_s = n_tiles * (2 + 7 + 1) / 0.94e9
-    lat = max(compute_s, vmem_s, hbm_s) + overhead_s
-    bound = {compute_s: "compute", vmem_s: "vmem", hbm_s: "hbm"}[
-        max(compute_s, vmem_s, hbm_s)]
-    if overhead_s > max(compute_s, vmem_s, hbm_s):
+    slowest = max(compute_s, vmem_s, hbm_s)
+    lat = slowest + overhead_s
+    # explicit comparison (a dict keyed by the times would merge entries
+    # whenever two bounds are numerically equal); ties break toward the
+    # earlier term in compute > vmem > hbm order
+    if slowest == compute_s:
+        bound = "compute"
+    elif slowest == vmem_s:
+        bound = "vmem"
+    else:
+        bound = "hbm"
+    if overhead_s > slowest:
         bound = "latency"
     return Plan(bh=bh, n_tiles=n_tiles, vmem_bytes=vmem, resident=resident,
                 step_latency_s=lat, util=util, bound=bound)

@@ -1,0 +1,12 @@
+"""Distribution substrate: logical-axis sharding rules and pipeline stages.
+
+``repro.dist.sharding`` — the rules engine mapping logical tensor axes to
+mesh axes (the multi-device analogue of the paper's per-problem-size
+design-parameter search; see the module docstring).
+``repro.dist.pipeline`` — GPipe-style pipeline parallelism over a mesh
+axis via ``shard_map`` + ``ppermute``.
+"""
+
+from repro.dist.sharding import Sharder, make_rules, make_sharder
+
+__all__ = ["Sharder", "make_rules", "make_sharder"]

@@ -1,0 +1,213 @@
+"""Sharding rules engine: logical axes -> mesh axes, per architecture x mode.
+
+Why a *rules table* instead of hardcoded ``PartitionSpec``s
+-----------------------------------------------------------
+The paper's central claim is that a fixed-geometry kernel (Brainwave's
+hv=400/rv=40/ru=6 MVM engine) fragments utilization across problem sizes,
+while exposing the loop/tiling design parameters and re-searching them per
+problem size keeps the hardware busy (§3.3, Table 7).  The multi-device
+analogue of that design space is the *partitioning* of every tensor over
+the mesh: a layout that keeps a 14B dense model's weights resident and
+balanced is wrong for a 128-expert MoE, and a train-time layout (activations
+seq-replicated, params FSDP-sharded) is wrong for single-token decode
+(cache-dim sharding, no head-divisibility requirement).  So, exactly as the
+kernel DSE picks ``bh`` per (cell, batch, precision), this module picks a
+rules table per (architecture, mode):
+
+  ``make_rules(cfg, mode)``  ->  {logical_axis: (mesh_axis, ...)}
+
+and a :class:`Sharder` resolves every tensor against that table at trace
+time.  Model code never names mesh axes — it annotates *logical* axes
+(``"batch"``, ``"heads"``, ``"mlp"``, ``"experts"``, ...) via
+``ParamSpec.axes`` and ``sharder.constrain``; swapping the table re-lays-out
+the whole program (the same ``constrain`` call sites resolve differently for
+"heads" vs "qseq" attention sharding, or train vs decode).
+
+Resolution semantics
+--------------------
+* **Divisibility fallback** — ``resolve(axis, dim)`` walks the rule's mesh
+  axes and drops *trailing* axes until the dimension divides the product of
+  the remaining sizes; when nothing divides, the tensor axis is fully
+  replicated (returns ``None``).  This is what lets one table serve every
+  problem size: 48 heads shard 16-way, 40 heads silently fall back, decode's
+  size-1 seq dims always replicate.
+* **No mesh-axis reuse** — ``spec(axes, shape)`` never assigns one mesh axis
+  to two tensor dims (GSPMD would reject it); earlier tensor dims win, e.g.
+  in an expert weight ``("experts", "embed", "mlp")`` the experts take the
+  model axis and the mlp dim stays unsharded.
+* **Replicated no-op path** — ``Sharder(None, {})`` (mesh-less) makes
+  ``constrain`` the identity and every sharding ``None``, so single-host
+  smoke tests and CPU serving run the exact same model code.
+
+The ZeRO-1 variant used by ``launch/dryrun.py`` is this table plus one
+override (``rules["embed"] = ("data",)`` applied only to optimizer-state
+shardings): optimizer state shards over data while params stay replicated,
+and GSPMD inserts the re-gather in the update step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.params import is_spec
+
+# Logical axes that carry the batch (data-parallel) dimension.
+_DATA_AXES: Tuple[str, ...] = ("pod", "data")
+# Logical weight axes that shard over the model (tensor-parallel) axis.
+_WEIGHT_AXES: Tuple[str, ...] = ("mlp", "vocab", "q_flat", "kv_flat",
+                                 "ssm_inner", "experts", "rwkv_heads")
+
+
+class Sharder:
+    """Resolves logical tensor axes against a mesh through a rules table."""
+
+    def __init__(self, mesh, rules: Dict[str, Tuple[str, ...]]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    # ------------------------------------------------------------- resolve
+    def resolve(self, axis: Optional[str], dim: int
+                ) -> Optional[Tuple[str, ...]]:
+        """Mesh axes for one tensor dim, with the divisibility fallback:
+        trailing mesh axes are dropped until ``dim`` divides the shard
+        count; ``None`` means fully replicated."""
+        if self.mesh is None or axis is None:
+            return None
+        cand = [a for a in self.rules.get(axis, ()) if a in self.mesh.shape]
+        while cand and dim % self._size(cand):
+            cand.pop()
+        return tuple(cand) or None
+
+    def _size(self, axes: Sequence[str]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # ---------------------------------------------------------------- spec
+    def spec(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        """PartitionSpec for a tensor; a mesh axis is never used twice
+        within one spec (earlier tensor dims win)."""
+        used: set = set()
+        entries = []
+        for axis, dim in zip(axes, shape):
+            r = self.resolve(axis, dim)
+            if r:
+                r = [a for a in r if a not in used]
+                while r and dim % self._size(r):
+                    r.pop()
+            if not r:
+                entries.append(None)
+                continue
+            used.update(r)
+            entries.append(r[0] if len(r) == 1 else tuple(r))
+        return P(*entries)
+
+    # ------------------------------------------------------------ shardings
+    def sharding(self, axes: Sequence[Optional[str]], shape: Sequence[int]
+                 ) -> Optional[NamedSharding]:
+        """NamedSharding for one tensor (``None`` on the mesh-less path)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def param_shardings(self, specs):
+        """Sharding tree for a ``ParamSpec`` tree (``models.params``)."""
+        def one(s):
+            axes = s.axes if s.axes else (None,) * len(s.shape)
+            return self.sharding(axes, s.shape)
+        return jax.tree.map(one, specs, is_leaf=is_spec)
+
+    # ------------------------------------------------------------ constrain
+    def constrain(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        """``with_sharding_constraint`` by logical axes; identity when no
+        mesh is attached or nothing resolves (the replicated no-op path)."""
+        if self.mesh is None or not self.rules:
+            return x
+        spec = self.spec(axes, x.shape)
+        if all(e is None for e in spec):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Per-architecture, per-mode rules tables
+# ---------------------------------------------------------------------------
+
+
+def _heads_mode(cfg: ModelConfig) -> bool:
+    """"heads" attention sharding: head dims shard over the model axis;
+    "qseq": the query sequence shards instead (head counts like 40 or 25
+    that don't divide the 16-way production axis).  "auto" decides by the
+    production mesh's model-axis width."""
+    if cfg.attention_sharding == "auto":
+        return cfg.n_heads % 16 == 0
+    return cfg.attention_sharding != "qseq"
+
+
+def make_rules(cfg: ModelConfig, mode: str) -> Dict[str, Tuple[str, ...]]:
+    """The rules table for one (architecture, mode) cell.
+
+    ``mode``: "train" | "prefill" | "decode".  Covers every logical axis the
+    ten configs annotate: dense (``heads``/``qseq``), MoE (``experts``,
+    ``expert_group``), RWKV (``rwkv_heads``), SSM (``ssm_inner``),
+    ``vocab``/``mlp`` weight dims and the ``batch``/seq activation dims.
+    """
+    if mode not in ("train", "prefill", "decode"):
+        raise ValueError(f"unknown mode {mode!r}")
+
+    rules: Dict[str, Tuple[str, ...]] = {
+        # data parallelism
+        "batch": _DATA_AXES,
+        "expert_group": _DATA_AXES,   # MoE token groups ride the data axis
+    }
+    # tensor parallelism: weight dims over the model axis
+    for ax in _WEIGHT_AXES:
+        rules[ax] = ("model",)
+
+    if mode == "train":
+        if cfg.fsdp:
+            # FSDP: the shared "embed" dim additionally shards over data,
+            # so params + Adam state scale with the full chip count.
+            rules["embed"] = ("data",)
+        if not cfg.train_tp:
+            # pure DP lever: replicate weights, batch spans every axis
+            for ax in _WEIGHT_AXES:
+                rules[ax] = ()
+            rules["batch"] = _DATA_AXES + ("model",)
+            rules["expert_group"] = _DATA_AXES + ("model",)
+        if cfg.seq_parallel:
+            # Megatron-SP: activations stay seq-sharded through the layer
+            rules["seq"] = ("model",)
+        if cfg.shard_residual_seq:
+            rules["res_seq"] = ("model",)
+
+    if mode in ("train", "prefill"):
+        if _heads_mode(cfg):
+            rules["heads"] = ("model",)
+            rules["kv_heads"] = ("model",)
+        else:
+            rules["qseq"] = ("model",)
+    else:
+        # decode: the KV cache's sequence dim shards over the model axis
+        # (flash-decode style: partial softmax + all-reduce), which needs
+        # no head divisibility at all — heads/qseq stay replicated.
+        rules["cache_seq"] = ("model",)
+        rules["window"] = ("model",)
+
+    if mode == "prefill":
+        # prefill *produces* the decode cache: lay it out as decode reads it
+        rules["cache_seq"] = ("model",)
+        rules["window"] = ("model",)
+
+    return rules
+
+
+def make_sharder(cfg: ModelConfig, mesh, mode: str) -> Sharder:
+    """Tie it together: the Sharder for one (architecture, mesh, mode)."""
+    return Sharder(mesh, make_rules(cfg, mode))

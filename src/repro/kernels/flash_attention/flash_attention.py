@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._jax_compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -108,7 +112,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pltpu.VMEM((bq,), F32),
             pltpu.VMEM((bq, d), F32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -39,6 +39,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._jax_compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 F32 = jnp.float32
 
 
@@ -173,7 +177,7 @@ def fused_lstm(x_seq, w_x, w_h, s_x, s_h, b, h0, c0, *,
             pltpu.VMEM((2, B, H), F32),
             pltpu.VMEM((B, H), F32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
         name="fused_lstm",
@@ -201,7 +205,7 @@ def fused_gru(x_seq, w_x, w_h, s_x, s_h, b_x, b_h, h0, *,
             jax.ShapeDtypeStruct((B, H), F32),
         ],
         scratch_shapes=[pltpu.VMEM((2, B, H), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
         name="fused_gru",

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._jax_compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 F32 = jnp.float32
 
 _EPILOGUES = {
@@ -81,7 +85,7 @@ def matmul_w8a16(x, w_q, scale, bias=None, *, act: str = "none",
         out_specs=pl.BlockSpec((bm, bn), lambda im, jn, ik: (im, jn)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.bfloat16),
         scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="matmul_w8a16",

@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._jax_compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 F32 = jnp.float32
 
 
@@ -77,7 +81,7 @@ def rwkv6_step(r, k, v, w_log, u, state, *, interpret: bool = False):
             jax.ShapeDtypeStruct((B, H, K, V), F32),
         ],
         scratch_shapes=[pltpu.VMEM((B, H, K, V), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="rwkv6_step",

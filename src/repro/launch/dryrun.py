@@ -61,6 +61,8 @@ F32 = jnp.float32
 
 def _analyze(compiled) -> Dict[str, Any]:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax < 0.5 wraps the dict in a list
+        cost = cost[0] if cost else {}
     colls = parse_collectives(compiled.as_text())
     mem = compiled.memory_analysis()
     out = {

@@ -10,7 +10,20 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: meshes carry explicit axis types; default all-Auto
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every axis is implicitly Auto
+    AxisType = None
+
+
+def _make_mesh(shape, axes, devices) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape),
+                             devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -27,9 +40,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"{len(devices)}; run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"(see repro.launch.dryrun)")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape),
-                         devices=devices)
+    return _make_mesh(shape, axes, devices)
 
 
 def make_test_mesh(shape: Sequence[int] = (2, 4),
@@ -38,9 +49,7 @@ def make_test_mesh(shape: Sequence[int] = (2, 4),
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(shape),
-                         devices=jax.devices()[:n])
+    return _make_mesh(tuple(shape), tuple(axes), jax.devices()[:n])
 
 
 def mesh_chips(mesh: Mesh) -> int:

@@ -8,6 +8,7 @@ batching engine.
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
@@ -30,7 +31,14 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="DEBUG logging: per-tick engine utilization lines")
     args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    if args.verbose:  # scope DEBUG to our loggers; root DEBUG floods w/ jax
+        logging.getLogger("repro").setLevel(logging.DEBUG)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
@@ -51,6 +59,7 @@ def main() -> None:
     total = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s)")
+    print(f"engine stats: {engine.stats()}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} -> {r.output[:8]}")
     assert all(r.done for r in reqs)

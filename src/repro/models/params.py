@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -96,7 +97,10 @@ def tree_init(specs, key: jax.Array) -> Any:
     out = []
     for path, spec in leaves_with_paths:
         path_str = jax.tree_util.keystr(path)
-        sub = jax.random.fold_in(key, hash(path_str) % (2**31))
+        # crc32, not hash(): str hashing is randomized per process, which
+        # would reshuffle every init between runs (and break the promise
+        # this docstring makes)
+        sub = jax.random.fold_in(key, zlib.crc32(path_str.encode()) % (2**31))
         out.append(spec.initialize(sub))
     return jax.tree.unflatten(treedef, out)
 

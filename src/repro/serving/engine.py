@@ -55,6 +55,9 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.next_token = np.zeros((max_batch,), np.int32)
         self.queue: deque[Request] = deque()
+        self.completed = 0        # requests finished since construction
+        self.total_tokens = 0     # tokens generated (prefill + decode)
+        self._tick = 0
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(
@@ -92,12 +95,19 @@ class ServingEngine:
             req = self.slots[i]
             tok = int(sampled[i])
             req.output.append(tok)
+            self.total_tokens += 1
             self.next_token[i] = tok
             hit_eos = req.eos_id is not None and tok == req.eos_id
             full = lengths[i] >= self.max_len - 1
             if hit_eos or full or len(req.output) >= req.max_new_tokens:
                 req.done = True
+                self.completed += 1
                 self.slots[i] = None
+        self._tick += 1
+        log.debug("tick %d: util=%.2f (%d/%d slots) queued=%d "
+                  "completed=%d total_tokens=%d", self._tick,
+                  len(active) / self.max_batch, len(active), self.max_batch,
+                  len(self.queue), self.completed, self.total_tokens)
         return True
 
     # ------------------------------------------------------------- internals
@@ -119,6 +129,7 @@ class ServingEngine:
             self._key, sub = jax.random.split(self._key)
             first = int(np.asarray(sample(logits1, sub, self.sampler))[0])
             req.output.append(first)
+            self.total_tokens += 1
             self.next_token[i] = first
             self.slots[i] = req
 
@@ -136,4 +147,6 @@ class ServingEngine:
         return {
             "active": sum(r is not None for r in self.slots),
             "queued": len(self.queue),
+            "completed": self.completed,
+            "total_tokens": self.total_tokens,
         }

@@ -54,8 +54,9 @@ def test_real_lowering_has_collectives():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
-mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((4,), ("model",))
 f = jax.jit(lambda x, w: jax.nn.relu(x @ w).sum(),
             in_shardings=(NamedSharding(mesh, P(None, "model")),
                           NamedSharding(mesh, P("model", None))))

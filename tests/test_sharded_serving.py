@@ -1,0 +1,108 @@
+"""Sharded end-to-end decode: the continuous-batching engine under a
+non-trivial Sharder on a small mesh produces the same tokens as the
+``mesh=None`` replicated path, and the engine's load counters track work."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.dist.sharding import Sharder, make_rules
+from repro.models.lm import build_model
+from repro.serving import ServingEngine
+from repro.testing import reduced_config
+
+
+def test_engine_stats_counters_track_load():
+    cfg = reduced_config("rwkv6-1.6b")
+    model = build_model(cfg)
+    import jax
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, Sharder(None, {}), max_batch=2,
+                        max_len=32)
+    reqs = [eng.submit([1, 2, 3, 4 + i], max_new_tokens=4) for i in range(3)]
+    eng.run()
+    s = eng.stats()
+    assert s["completed"] == 3
+    assert s["total_tokens"] == sum(len(r.output) for r in reqs) == 12
+    assert s["active"] == 0 and s["queued"] == 0
+
+
+def test_decode_rules_shard_cache_not_heads():
+    """Decode needs no head divisibility: the cache dim takes the model
+    axis; train/prefill give it to heads (or qseq) instead."""
+    cfg = reduced_config("gemma3-12b")
+    dec = make_rules(cfg, "decode")
+    assert dec["cache_seq"] == ("model",)
+    assert "heads" not in dec and "qseq" not in dec
+    pre = make_rules(cfg, "prefill")
+    assert pre["heads"] == ("model",)
+
+
+SHARDED_DECODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.dist.sharding import Sharder, make_sharder
+from repro.launch.mesh import make_test_mesh
+from repro.models.lm import build_model
+from repro.serving import ServingEngine
+from repro.testing import reduced_config
+
+cfg = reduced_config("rwkv6-1.6b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+nosh = Sharder(None, {})
+mesh = make_test_mesh((2, 2), ("data", "model"))
+sharder = make_sharder(cfg, mesh, "decode")
+# the rules must actually resolve on this mesh (non-trivial sharding)
+assert sharder.resolve("batch", 2) == ("data",)
+assert sharder.resolve("mlp", cfg.d_ff) == ("model",)
+
+# --- numerical equivalence, teacher-forced over prefill + 4 decode steps.
+# bf16 reductions reorder under sharding (~1e-2 logit wobble on a ~3 logit
+# scale), so compare logits with tolerance rather than argmax'd tokens.
+batch = {"tokens": jnp.asarray([[5, 9, 3, 7], [2, 4, 6, 8]], jnp.int32)}
+c_r, l_r = jax.jit(lambda p, b: model.prefill(p, b, nosh, max_len=16))(
+    params, batch)
+c_s, l_s = jax.jit(lambda p, b: model.prefill(p, b, sharder, max_len=16))(
+    params, batch)
+np.testing.assert_allclose(np.asarray(l_r, np.float32),
+                           np.asarray(l_s, np.float32), atol=0.15)
+dec_r = jax.jit(lambda p, c, t: model.decode_step(p, c, t, nosh))
+dec_s = jax.jit(lambda p, c, t: model.decode_step(p, c, t, sharder))
+toks = jnp.argmax(l_r, -1).astype(jnp.int32)
+for _ in range(4):
+    c_r, l_r = dec_r(params, c_r, toks)
+    c_s, l_s = dec_s(params, c_s, toks)
+    np.testing.assert_allclose(np.asarray(l_r, np.float32),
+                               np.asarray(l_s, np.float32), atol=0.15)
+    toks = jnp.argmax(l_r, -1).astype(jnp.int32)
+
+# --- the engine end-to-end under the sharded Sharder: continuous batching
+# completes every request and the counters track the work
+prompts = [[5, 9, 3, 7], [2, 4, 6, 8, 10], [11, 1, 12], [3, 3, 3, 3, 3, 3]]
+eng = ServingEngine(model, params, sharder, max_batch=2, max_len=32)
+reqs = [eng.submit(list(p), max_new_tokens=6) for p in prompts]
+eng.run()
+assert all(r.done and len(r.output) == 6 for r in reqs)
+stats = eng.stats()
+assert stats["completed"] == len(prompts)
+assert stats["total_tokens"] == sum(len(r.output) for r in reqs)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_decode_matches_replicated():
+    """Decode under a (data, model) mesh Sharder matches the mesh=None
+    replicated path numerically (teacher-forced), and the engine serves
+    end-to-end under the sharded layout."""
+    r = subprocess.run([sys.executable, "-c", SHARDED_DECODE],
+                       capture_output=True, text=True, timeout=900,
+                       env={**os.environ, "PYTHONPATH": "src"}, cwd=".")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
