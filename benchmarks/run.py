@@ -15,6 +15,7 @@ from benchmarks import (
     energy,
     fig4_fragmentation,
     roofline_table,
+    serving_load,
     table6_deepbench,
     table7_dse,
 )
@@ -25,6 +26,7 @@ SUITES = {
     "fig4_fragmentation": fig4_fragmentation,
     "energy": energy,
     "roofline_table": roofline_table,
+    "serving_load": serving_load,
 }
 
 

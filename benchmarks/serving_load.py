@@ -1,0 +1,164 @@
+"""Serving-load benchmark: continuous batching under Poisson arrivals.
+
+The paper's real-time scenario — asynchronous batch-of-1 arrivals — turned
+into a regression-trackable benchmark: for every cell of
+``repro.configs.SERVING_LOAD_SWEEP`` (dense / MoE / RWKV architecture x
+``max_batch`` x arrival rate) it replays a seeded Poisson workload through
+the continuous-batching engine on a virtual clock and aggregates
+per-request latency percentiles (queue-wait, TTFT, TPOT) plus tokens/sec
+and mean slot utilization.
+
+  PYTHONPATH=src python -m benchmarks.serving_load [--full] [--seed N] \\
+      [--out BENCH_serving.json]
+
+The ``metrics`` block of every cell is computed on the virtual clock, so
+it is a *pure function of (sweep, seed)*: two runs with the same seed are
+byte-identical, which is what makes ``BENCH_serving.json`` diffable as the
+repo's perf trajectory (see benchmarks/README.md).  Wall-clock numbers
+(host-dependent, noisy) are reported separately under ``wall`` and are
+excluded from the determinism contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import jax
+
+from benchmarks.common import Row
+from repro.configs import SERVING_LOAD_SWEEP, ServingLoadCell, get_config
+from repro.dist.sharding import make_sharder
+from repro.models.lm import build_model
+from repro.serving import ServingEngine, drive, make_workload
+from repro.serving import metrics as smetrics
+from repro.testing import reduced_config
+
+SCHEMA = "serving_load/v1"
+DEFAULT_OUT = "BENCH_serving.json"
+
+
+def _build(arch: str, reduced: bool):
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
+             reduced: bool = True, max_len: int = 64,
+             _built=None) -> Dict[str, object]:
+    """One sweep cell: build (or reuse) the model, replay the workload on a
+    virtual clock, return {identity, metrics, wall}."""
+    cfg, model, params = _built or _build(cell.arch, reduced)
+    sharder = make_sharder(cfg, None, "decode")
+    engine = ServingEngine(model, params, sharder, max_batch=cell.max_batch,
+                           max_len=max_len, seed=seed)
+    items = make_workload("poisson", rate=cell.rate, duration=duration,
+                          seed=seed, vocab_size=cfg.vocab_size,
+                          prompt_len=(4, 12), max_new_tokens=(6, 10))
+    t0 = time.perf_counter()
+    reqs = drive(engine, items)
+    wall_s = time.perf_counter() - t0
+    agg = smetrics.aggregate(reqs, ticks=engine.ticks,
+                             util_history=engine.util_history)
+    return {
+        "name": cell.name,
+        "arch": cell.arch,
+        "family": cell.family,
+        "max_batch": cell.max_batch,
+        "rate": cell.rate,
+        "duration": duration,
+        "metrics": agg,  # virtual-clock: deterministic for a fixed seed
+        "wall": {  # host-dependent; excluded from the determinism contract
+            "seconds": wall_s,
+            "tokens_per_sec_wall": agg["tokens"] / wall_s if wall_s else 0.0,
+        },
+    }
+
+
+def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
+          cells: Optional[Sequence[ServingLoadCell]] = None,
+          duration: Optional[float] = None) -> Dict[str, object]:
+    """The full sweep -> the BENCH_serving.json document."""
+    cells = list(cells if cells is not None else SERVING_LOAD_SWEEP)
+    duration = duration if duration is not None else (32.0 if fast else 256.0)
+    built: Dict[str, tuple] = {}  # one model build per arch, many cells
+    out_cells: List[Dict[str, object]] = []
+    for cell in cells:
+        if cell.arch not in built:
+            built[cell.arch] = _build(cell.arch, reduced)
+        out_cells.append(run_cell(cell, duration=duration, seed=seed,
+                                  reduced=reduced, _built=built[cell.arch]))
+    return {
+        "schema": SCHEMA,
+        "seed": seed,
+        "mode": "fast" if fast else "full",
+        "reduced": reduced,
+        "duration": duration,
+        "families": sorted({c.family for c in cells}),
+        "cells": out_cells,
+    }
+
+
+def deterministic_view(doc: Dict[str, object]) -> Dict[str, object]:
+    """The seed-determined subset of a sweep document (drops wall timings);
+    two same-seed runs must agree on this exactly."""
+    return {
+        **{k: v for k, v in doc.items() if k != "cells"},
+        "cells": [{k: v for k, v in c.items() if k != "wall"}
+                  for c in doc["cells"]],
+    }
+
+
+def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def run(fast: bool = True) -> Iterator[Row]:
+    """benchmarks.run harness entry: emit one CSV row per cell and refresh
+    BENCH_serving.json in the working directory."""
+    doc = sweep(fast=fast)
+    write(doc)
+    for c in doc["cells"]:
+        m, w = c["metrics"], c["wall"]
+        us_per_tok = w["seconds"] / m["tokens"] * 1e6 if m["tokens"] else 0.0
+        yield Row(
+            f"serving_load/{c['name']}",
+            us_per_tok,
+            f"ttft_p99={m['ttft']['p99']:.0f}t"
+            f" tpot_p99={m['tpot']['p99']:.2f}t"
+            f" qwait_p99={m['queue_wait']['p99']:.0f}t"
+            f" tok_per_tick={m['tokens_per_sec']:.2f}"
+            f" util={m['mean_util']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="longer workloads (256 clock units vs 32)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--full-size", action="store_true",
+                    help="full-size configs (default: reduced, CPU-friendly)")
+    args = ap.parse_args()
+    doc = sweep(fast=not args.full, seed=args.seed,
+                reduced=not args.full_size)
+    write(doc, args.out)
+    print(f"wrote {args.out}: {len(doc['cells'])} cells, "
+          f"families={doc['families']}")
+    for c in doc["cells"]:
+        m = c["metrics"]
+        print(f"  {c['name']:>30}"
+              f" ttft p50/p99 = {m['ttft']['p50']:5.1f}/{m['ttft']['p99']:5.1f}t"
+              f"  tpot p50/p99 = {m['tpot']['p50']:4.2f}/{m['tpot']['p99']:4.2f}t"
+              f"  {m['tokens_per_sec']:5.2f} tok/tick"
+              f"  util {m['mean_util']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -109,3 +109,40 @@ DEEPBENCH_TASKS = (
     DeepBenchTask("gru", 2048, 375, 5040.00, 17.70, 0.954, 1.2833),
     DeepBenchTask("gru", 2560, 375, 7590.00, 23.57, 0.993, 1.9733),
 )
+
+
+# ---------------------------------------------------------------------------
+# Serving-load sweep: the asynchronous-arrival serving benchmark's grid.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingLoadCell:
+    """One cell of the serving-load benchmark (benchmarks/serving_load.py):
+    an architecture served at ``max_batch`` slots under Poisson arrivals at
+    ``rate`` requests per clock unit.  ``family`` tags the model class so
+    the benchmark provably spans dense / MoE / RWKV."""
+
+    arch: str
+    family: str          # "dense" | "moe" | "rwkv"
+    max_batch: int
+    rate: float
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/b{self.max_batch}/r{self.rate:g}"
+
+
+# One under-loaded and one saturating rate per (arch, max_batch): the
+# benchmark's requests average ~16 tokens (prompt 4-12 + 6-10 new), so
+# rate 0.1 offers ~1.6 tok/unit — under even max_batch=2's 2-tokens/tick
+# ceiling (empty-queue regime) — while rate 1.0 offers ~16, past
+# max_batch=4's ceiling (queue-growth regime).
+SERVING_LOAD_SWEEP: Tuple[ServingLoadCell, ...] = tuple(
+    ServingLoadCell(arch, family, mb, rate)
+    for arch, family in (("qwen2.5-14b", "dense"),
+                         ("qwen3-moe-30b-a3b", "moe"),
+                         ("rwkv6-1.6b", "rwkv"))
+    for mb in (2, 4)
+    for rate in (0.1, 1.0)
+)

@@ -1,8 +1,19 @@
 """Serving launcher: batched request serving through the continuous-
-batching engine.
+batching engine, optionally under an open-loop arrival process.
 
+  # legacy closed-loop mode: submit N requests up front, drain
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
       --requests 8 --max-new 16
+
+  # the paper's real-time scenario: Poisson arrivals, latency percentiles
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
+      --arrival poisson --rate 0.5 --duration 64 --seed 0
+
+``--arrival {poisson,mmpp,trace}`` replays a workload from
+``repro.serving.workload`` and prints the TTFT/TPOT/queue-wait percentile
+summary.  ``--clock virtual`` (default) is deterministic — the metrics are
+a pure function of (workload, seed); ``--clock wall`` paces arrivals in
+real time and additionally reports measured wall tokens/sec.
 """
 
 from __future__ import annotations
@@ -18,6 +29,8 @@ from repro.configs import get_config
 from repro.dist.sharding import make_sharder
 from repro.models.lm import build_model
 from repro.serving import ServingEngine
+from repro.serving import metrics as smetrics
+from repro.serving import workload as wl
 from repro.serving.sampler import SamplerConfig
 from repro.testing import reduced_config
 
@@ -31,6 +44,28 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload + sampler seed")
+    # open-loop arrival process (the paper's asynchronous-serving scenario)
+    ap.add_argument("--arrival", default="batch",
+                    choices=("batch",) + wl.ARRIVAL_KINDS,
+                    help="'batch' submits --requests up front (legacy); "
+                         "poisson/mmpp/trace replay an arrival process")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="arrival rate, requests per clock unit")
+    ap.add_argument("--duration", type=float, default=64.0,
+                    help="workload span in clock units")
+    ap.add_argument("--trace-file", default=None,
+                    help="JSONL trace for --arrival trace (see "
+                         "repro.serving.workload.save_trace)")
+    ap.add_argument("--clock", default="virtual",
+                    choices=("virtual", "wall"),
+                    help="virtual: deterministic tick clock; wall: pace "
+                         "arrivals in real time")
+    ap.add_argument("--truncate-prompts", action="store_true",
+                    help="warn + drop the tail of prompts longer than "
+                         "max_len-1 instead of rejecting them (useful when "
+                         "replaying traces recorded on a larger engine)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="DEBUG logging: per-tick engine utilization lines")
     args = ap.parse_args()
@@ -46,23 +81,61 @@ def main() -> None:
     sharder = make_sharder(cfg, None, "decode")
     engine = ServingEngine(model, params, sharder,
                            max_batch=args.max_batch, max_len=args.max_len,
-                           sampler=SamplerConfig(temperature=args.temperature))
-    rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              size=rng.integers(4, 12)).tolist()
-        reqs.append(engine.submit(prompt, max_new_tokens=args.max_new))
+                           sampler=SamplerConfig(temperature=args.temperature),
+                           seed=args.seed,
+                           truncate_prompts=args.truncate_prompts)
+
+    if args.arrival == "batch":
+        rng = np.random.default_rng(args.seed)
+        reqs = []
+        for _ in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=rng.integers(4, 12)).tolist()
+            reqs.append(engine.submit(prompt, max_new_tokens=args.max_new))
+        t0 = time.time()
+        engine.run()
+        dt = time.time() - t0
+        total = sum(len(r.output) for r in reqs)
+        print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
+              f"({total/dt:.1f} tok/s)")
+        print(f"engine stats: {engine.stats()}")
+        for r in reqs[:3]:
+            print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} -> {r.output[:8]}")
+        assert all(r.done for r in reqs)
+        return
+
+    items = wl.make_workload(
+        args.arrival, rate=args.rate, duration=args.duration, seed=args.seed,
+        vocab_size=cfg.vocab_size, max_new_tokens=(args.max_new, args.max_new),
+        trace_path=args.trace_file)
+    # declared span for generated workloads; a trace only knows its arrivals
+    span = None if args.arrival == "trace" else args.duration
+    shown = span if span is not None else max((it.t for it in items),
+                                              default=0.0)
+    print(f"replaying {len(items)} {args.arrival} arrivals over "
+          f"{shown:g} {args.clock}-clock units "
+          f"(offered {wl.offered_load(items, span):.2f} tok/unit)")
+    if args.clock == "wall":
+        # warm the decode + per-prompt-length prefill jit caches so
+        # tick_seconds measures steady-state serving, not XLA compiles
+        for n in sorted({len(it.prompt) for it in items}):
+            engine.submit([1] * n, max_new_tokens=2)
+        engine.run()
+        engine.reset_telemetry()
+    clock = wl.WallClock() if args.clock == "wall" else wl.VirtualClock()
     t0 = time.time()
-    engine.run()
+    reqs = wl.drive(engine, items, clock)
     dt = time.time() - t0
-    total = sum(len(r.output) for r in reqs)
-    print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s)")
-    print(f"engine stats: {engine.stats()}")
-    for r in reqs[:3]:
-        print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} -> {r.output[:8]}")
-    assert all(r.done for r in reqs)
+    # per-tick cost from busy time only: at low rates most of dt is idle
+    # sleep between arrivals, which must not inflate the latency scaling
+    tick_s = (clock.busy_seconds / max(1, engine.ticks)
+              if args.clock == "wall" else 1.0)
+    agg = smetrics.aggregate(reqs, ticks=engine.ticks,
+                             util_history=engine.util_history,
+                             tick_seconds=tick_s)
+    print(smetrics.format_summary(agg))
+    if args.clock == "wall":
+        print(f"wall: {dt:.2f}s, {agg['tokens'] / dt:.1f} tok/s measured")
 
 
 if __name__ == "__main__":

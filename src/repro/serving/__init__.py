@@ -1,1 +1,11 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.metrics import aggregate, format_summary  # noqa: F401
+from repro.serving.workload import (  # noqa: F401
+    VirtualClock,
+    WallClock,
+    WorkloadItem,
+    drive,
+    load_trace,
+    make_workload,
+    save_trace,
+)

@@ -39,24 +39,36 @@ class Request:
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False       # prompt tail dropped (truncate_prompts)
+    capped: bool = False          # cache can't hold max_new_tokens: the
+    #                               output will stop short (length cut)
+    # tick stamps (engine tick counter; see serving.metrics for semantics)
+    t_submit: int = 0             # tick at submission
+    t_admit: Optional[int] = None   # tick the prefill ran (slot granted)
+    t_first: Optional[int] = None   # tick the first token was produced
+    t_done: Optional[int] = None    # tick the request completed
 
 
 class ServingEngine:
     def __init__(self, model: LM, params, sharder: Sharder, *,
                  max_batch: int = 4, max_len: int = 128,
-                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 truncate_prompts: bool = False):
         self.model = model
         self.params = params
         self.sharder = sharder
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler
+        self.truncate_prompts = truncate_prompts
         self.cache = model.init_cache(max_batch, max_len)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.next_token = np.zeros((max_batch,), np.int32)
         self.queue: deque[Request] = deque()
         self.completed = 0        # requests finished since construction
         self.total_tokens = 0     # tokens generated (prefill + decode)
+        self.finished: List[Request] = []   # completed Requests, in order
+        self.util_history: List[float] = []  # per-tick active/max_batch
         self._tick = 0
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
@@ -69,9 +81,43 @@ class ServingEngine:
     # ------------------------------------------------------------------ API
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
-        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}: the prefill always emits "
+                             f"one token")
+        limit = self.max_len - 1  # >= 1 cache slot left for generation
+        truncated = False
+        if len(prompt) > limit:
+            if not self.truncate_prompts:
+                raise ValueError(
+                    f"prompt length {len(prompt)} exceeds max_len-1 = "
+                    f"{limit}; raise max_len or construct the engine with "
+                    f"truncate_prompts=True to drop the tail")
+            log.warning("truncating prompt from %d to %d tokens "
+                        "(max_len=%d)", len(prompt), limit, self.max_len)
+            prompt, truncated = prompt[:limit], True
+        req = Request(next(self._uid), prompt, max_new_tokens, eos_id,
+                      truncated=truncated, t_submit=self._tick)
+        # the `full` stop in step() cuts generation at max(2, max_len -
+        # len(prompt)) tokens (prefill token + decodes until the cache
+        # fills): flag requests whose max_new_tokens cannot fit instead of
+        # cutting the output silently
+        cap = max(2, self.max_len - len(prompt))
+        if max_new_tokens > cap:
+            req.capped = True
+            log.warning("request %d: max_new_tokens=%d exceeds cache room "
+                        "for a %d-token prompt (max_len=%d); output stops "
+                        "at %d tokens", req.uid, max_new_tokens,
+                        len(prompt), self.max_len, cap)
         self.queue.append(req)
         return req
+
+    def has_work(self) -> bool:
+        """True while any request is queued or occupying a slot."""
+        return bool(self.queue) or any(r is not None for r in self.slots)
 
     def run(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
@@ -82,9 +128,15 @@ class ServingEngine:
     def step(self) -> bool:
         """One engine tick: admit pending requests, one batched decode.
         Returns False when idle."""
-        self._admit()
+        n_instant = self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
+            if n_instant:
+                # prefill-only tick: every admit finished at its first
+                # token.  Real work happened, so time still advances.
+                self.util_history.append(min(1.0, n_instant / self.max_batch))
+                self._tick += 1
+                return True
             return bool(self.queue)
         tokens = jnp.asarray(self.next_token)
         self.cache, logits = self._decode(self.params, self.cache, tokens)
@@ -100,38 +152,60 @@ class ServingEngine:
             hit_eos = req.eos_id is not None and tok == req.eos_id
             full = lengths[i] >= self.max_len - 1
             if hit_eos or full or len(req.output) >= req.max_new_tokens:
-                req.done = True
-                self.completed += 1
+                self._finish(req)
                 self.slots[i] = None
+        self.util_history.append(
+            min(1.0, (len(active) + n_instant) / self.max_batch))
         self._tick += 1
-        log.debug("tick %d: util=%.2f (%d/%d slots) queued=%d "
+        log.debug("tick %d: util=%.2f (%d+%d/%d slots) queued=%d "
                   "completed=%d total_tokens=%d", self._tick,
-                  len(active) / self.max_batch, len(active), self.max_batch,
-                  len(self.queue), self.completed, self.total_tokens)
+                  self.util_history[-1], len(active), n_instant,
+                  self.max_batch, len(self.queue), self.completed,
+                  self.total_tokens)
         return True
 
     # ------------------------------------------------------------- internals
-    def _admit(self) -> None:
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        req.t_done = self._tick
+        self.completed += 1
+        self.finished.append(req)
+
+    def _admit(self) -> int:
+        """Admit queued requests into free slots; returns how many finished
+        at their prefill token (max_new_tokens=1 / instant EOS) — those
+        free their slot immediately, so the next queued request is retried
+        into the same slot within this tick."""
+        n_instant = 0
         for i in range(self.max_batch):
-            if self.slots[i] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            # keep at least one prompt token; decode stops at max_len anyway
-            keep = max(1, self.max_len - req.max_new_tokens - 1)
-            prompt = req.prompt[:keep]
-            batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
-            if self.model.cfg.m_rope_sections:
-                S = len(prompt)
-                batch["positions"] = jnp.broadcast_to(
-                    jnp.arange(S, dtype=jnp.int32), (1, 3, S))
-            cache1, logits1 = self._prefill(self.params, batch)
-            self._insert_slot(i, cache1)
-            self._key, sub = jax.random.split(self._key)
-            first = int(np.asarray(sample(logits1, sub, self.sampler))[0])
-            req.output.append(first)
-            self.total_tokens += 1
-            self.next_token[i] = first
-            self.slots[i] = req
+            while self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                # submit() guarantees 1 <= len(prompt) <= max_len - 1: the
+                # full prompt prefills (no silent tail loss) and at least
+                # one cache slot is left for generation.
+                prompt = req.prompt
+                batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+                if self.model.cfg.m_rope_sections:
+                    S = len(prompt)
+                    batch["positions"] = jnp.broadcast_to(
+                        jnp.arange(S, dtype=jnp.int32), (1, 3, S))
+                cache1, logits1 = self._prefill(self.params, batch)
+                self._insert_slot(i, cache1)
+                self._key, sub = jax.random.split(self._key)
+                first = int(np.asarray(sample(logits1, sub, self.sampler))[0])
+                req.output.append(first)
+                self.total_tokens += 1
+                req.t_admit = req.t_first = self._tick
+                if ((req.eos_id is not None and first == req.eos_id)
+                        or len(req.output) >= req.max_new_tokens):
+                    # done at the prefill token: never occupies the slot
+                    # for a decode tick
+                    self._finish(req)
+                    n_instant += 1
+                    continue
+                self.next_token[i] = first
+                self.slots[i] = req
+        return n_instant
 
     def _insert_slot(self, slot: int, cache1) -> None:
         """Scatter a batch-1 prefill cache into slot ``slot``."""
@@ -143,10 +217,29 @@ class ServingEngine:
             cache1["lengths"][0])
 
     # ------------------------------------------------------------- telemetry
-    def stats(self) -> Dict[str, int]:
+    @property
+    def ticks(self) -> int:
+        return self._tick
+
+    def reset_telemetry(self) -> None:
+        """Zero the counters/histories (e.g. after a jit warmup run, so
+        wall-clock tick timings exclude compile).  The engine must be
+        drained; queued or in-flight requests would get skewed stamps."""
+        if self.has_work():
+            raise RuntimeError("reset_telemetry() on a busy engine")
+        self.completed = 0
+        self.total_tokens = 0
+        self.finished = []
+        self.util_history = []
+        self._tick = 0
+
+    def stats(self) -> Dict[str, float]:
+        util = self.util_history
         return {
             "active": sum(r is not None for r in self.slots),
             "queued": len(self.queue),
             "completed": self.completed,
             "total_tokens": self.total_tokens,
+            "ticks": self._tick,
+            "mean_util": sum(util) / len(util) if util else 0.0,
         }

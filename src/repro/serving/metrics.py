@@ -1,0 +1,111 @@
+"""Per-request latency metrics for the serving engine.
+
+The engine stamps every request with *tick* timestamps (``t_submit`` /
+``t_admit`` / ``t_first`` / ``t_done``) and keeps a per-tick utilization
+history; this module turns a drained run into the serving numbers the
+paper's real-time scenario is judged on:
+
+* **queue-wait** — ticks between submission and admission to a slot (the
+  scheduling delay the paper's §6 latency breakdown charges to batching);
+* **TTFT** — time to first token, inclusive of the prefill tick: a request
+  admitted on its submission tick has TTFT 1, not 0;
+* **TPOT** — time per output token over the decode phase (first token
+  excluded, so a one-token request has no TPOT sample);
+* **tokens/sec** and mean utilization over the active span.
+
+Everything is computed in ticks and scaled by ``tick_seconds`` at the end,
+so the same aggregation serves both the deterministic virtual-clock mode
+(``tick_seconds=1.0`` — "seconds" are tick units) and wall-clock runs
+(``tick_seconds = measured wall time / ticks``).  Percentiles use the
+nearest-rank method: exact, deterministic, no interpolation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.engine import Request
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); NaN on empty input."""
+    if not xs:
+        return math.nan
+    xs = sorted(xs)
+    rank = max(1, math.ceil(q / 100.0 * len(xs)))
+    return float(xs[min(rank, len(xs)) - 1])
+
+
+def _summary(xs: Sequence[float]) -> Dict[str, float]:
+    out = {f"p{q}": percentile(xs, q) for q in PERCENTILES}
+    out["mean"] = float(sum(xs) / len(xs)) if xs else math.nan
+    out["n"] = len(xs)
+    return out
+
+
+def request_metrics(req: Request) -> Optional[Dict[str, float]]:
+    """Tick-domain latency numbers for one *completed* request (None if the
+    request never finished — it carries no valid stamps to aggregate)."""
+    if not req.done or req.t_done is None:
+        return None
+    out: Dict[str, float] = {
+        "queue_wait": float(req.t_admit - req.t_submit),
+        "ttft": float(req.t_first - req.t_submit + 1),
+        "n_tokens": float(len(req.output)),
+    }
+    if len(req.output) > 1:
+        out["tpot"] = (req.t_done - req.t_first) / (len(req.output) - 1)
+    return out
+
+
+def aggregate(reqs: Sequence[Request], *, ticks: int,
+              util_history: Sequence[float] = (),
+              tick_seconds: float = 1.0) -> Dict[str, object]:
+    """Aggregate a drained run into the benchmark's metric dict.
+
+    With ``tick_seconds=1.0`` (virtual clock) every field is a pure
+    function of the workload and the engine seed — two identical runs
+    produce an identical dict, which is what the regression trajectory
+    (``BENCH_serving.json``) diffs against.
+    """
+    per = [m for m in (request_metrics(r) for r in reqs) if m is not None]
+    tokens = int(sum(m["n_tokens"] for m in per))
+
+    def scaled(key: str) -> Dict[str, float]:
+        xs = [m[key] * tick_seconds for m in per if key in m]
+        return _summary(xs)
+
+    span = ticks * tick_seconds
+    util = list(util_history)
+    return {
+        "completed": len(per),
+        "submitted": len(reqs),
+        "tokens": tokens,
+        "ticks": int(ticks),
+        "tick_seconds": tick_seconds,
+        "queue_wait": scaled("queue_wait"),
+        "ttft": scaled("ttft"),
+        "tpot": scaled("tpot"),
+        "tokens_per_sec": tokens / span if span > 0 else math.nan,
+        "mean_util": (float(sum(util) / len(util)) if util else math.nan),
+    }
+
+
+def format_summary(agg: Dict[str, object]) -> str:
+    """Human-readable one-block summary for the serve CLI."""
+
+    def line(name: str) -> str:
+        s = agg[name]
+        return (f"  {name:<10} p50={s['p50']:8.3f}  p95={s['p95']:8.3f}  "
+                f"p99={s['p99']:8.3f}  mean={s['mean']:8.3f}  (n={s['n']})")
+
+    return "\n".join([
+        f"completed {agg['completed']}/{agg['submitted']} requests, "
+        f"{agg['tokens']} tokens in {agg['ticks']} ticks "
+        f"({agg['tokens_per_sec']:.2f} tok/s, "
+        f"mean util {agg['mean_util']:.2f})",
+        line("queue_wait"), line("ttft"), line("tpot"),
+    ])

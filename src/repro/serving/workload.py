@@ -1,0 +1,256 @@
+"""Serving-load workloads: arrival processes, traces, and the load driver.
+
+The paper's headline scenario is real-time serving — batch-of-1 requests
+arriving *asynchronously*, where queueing and utilization (not raw BLAS
+throughput) decide the win over the V100/Brainwave baselines.  This module
+generates those arrival patterns and replays them against the
+continuous-batching :class:`~repro.serving.engine.ServingEngine`:
+
+* :func:`poisson_arrivals` — memoryless arrivals at a fixed rate (the
+  paper's serving experiment, and the standard open-loop load model);
+* :func:`mmpp_arrivals` — a two-state Markov-modulated Poisson process
+  (bursty traffic: a quiet state and a burst state with exponentially
+  distributed dwell times), the classic model for flash-crowd load;
+* :func:`load_trace` / :func:`save_trace` — replayable JSON trace files,
+  so a production arrival log can be re-served bit-for-bit.
+
+Time is *virtual* by default: one engine tick is one unit of a
+:class:`VirtualClock`, so a workload run is a pure function of
+``(workload, seed)`` — tests and the regression benchmark never depend on
+wall time.  :class:`WallClock` swaps real time in for live measurement
+(``launch/serve.py --clock wall``); the engine itself only ever sees tick
+stamps, so its telemetry stays deterministic either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Request, ServingEngine
+
+ARRIVAL_KINDS = ("poisson", "mmpp", "trace")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadItem:
+    """One request in an arrival schedule (times in clock units)."""
+
+    t: float
+    prompt: Tuple[int, ...]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+    def to_json(self) -> dict:
+        d = {"t": self.t, "prompt": list(self.prompt),
+             "max_new_tokens": self.max_new_tokens}
+        if self.eos_id is not None:
+            d["eos_id"] = self.eos_id
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "WorkloadItem":
+        return WorkloadItem(float(d["t"]), tuple(int(x) for x in d["prompt"]),
+                            int(d.get("max_new_tokens", 16)), d.get("eos_id"))
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(rate: float, duration: float,
+                     rng: np.random.Generator) -> List[float]:
+    """Arrival times of a homogeneous Poisson process on ``[0, duration)``
+    (i.i.d. exponential inter-arrival gaps at ``rate`` per time unit)."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    times, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration:
+            return times
+        times.append(t)
+
+
+def mmpp_arrivals(rates: Tuple[float, float], dwell: Tuple[float, float],
+                  duration: float, rng: np.random.Generator) -> List[float]:
+    """Two-state Markov-modulated Poisson process: the arrival rate
+    switches between ``rates[0]`` (quiet) and ``rates[1]`` (burst), holding
+    each state for an Exp(1/dwell[s]) time — bursty open-loop load."""
+    if min(rates) <= 0 or min(dwell) <= 0:
+        raise ValueError(f"rates/dwell must be > 0, got {rates}, {dwell}")
+    times: List[float] = []
+    t, state = 0.0, 0
+    t_switch = rng.exponential(dwell[0])
+    while t < duration:
+        gap = rng.exponential(1.0 / rates[state])
+        if t + gap >= t_switch:
+            # state flips before the next arrival lands: restart the
+            # (memoryless) arrival clock from the switch point
+            t = t_switch
+            state = 1 - state
+            t_switch = t + rng.exponential(dwell[state])
+            continue
+        t += gap
+        if t < duration:
+            times.append(t)
+    return times
+
+
+def synthesize(times: Sequence[float], rng: np.random.Generator, *,
+               vocab_size: int, prompt_len: Tuple[int, int] = (4, 12),
+               max_new_tokens: Tuple[int, int] = (8, 16),
+               eos_id: Optional[int] = None) -> List[WorkloadItem]:
+    """Attach seeded random prompts/lengths to a list of arrival times."""
+    items = []
+    for t in times:
+        n = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        m = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
+        prompt = tuple(int(x) for x in rng.integers(0, vocab_size, size=n))
+        items.append(WorkloadItem(float(t), prompt, m, eos_id))
+    return items
+
+
+def make_workload(kind: str, *, rate: float, duration: float, seed: int,
+                  vocab_size: int,
+                  prompt_len: Tuple[int, int] = (4, 12),
+                  max_new_tokens: Tuple[int, int] = (8, 16),
+                  burst_factor: float = 4.0,
+                  dwell: Tuple[float, float] = (16.0, 4.0),
+                  trace_path: Optional[str] = None) -> List[WorkloadItem]:
+    """One-stop workload builder for the CLI and the benchmark.
+
+    ``kind``: "poisson" | "mmpp" | "trace".  For "mmpp" the quiet rate is
+    ``rate`` and the burst rate is ``rate * burst_factor``.  The result is
+    a pure function of the arguments (seeded ``numpy`` generator).
+    """
+    if kind == "trace":
+        if not trace_path:
+            raise ValueError("kind='trace' requires trace_path")
+        return load_trace(trace_path)
+    rng = np.random.default_rng(seed)
+    if kind == "poisson":
+        times = poisson_arrivals(rate, duration, rng)
+    elif kind == "mmpp":
+        times = mmpp_arrivals((rate, rate * burst_factor), dwell, duration,
+                              rng)
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r}; "
+                         f"known: {ARRIVAL_KINDS}")
+    return synthesize(times, rng, vocab_size=vocab_size,
+                      prompt_len=prompt_len, max_new_tokens=max_new_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Trace files
+# ---------------------------------------------------------------------------
+
+
+def save_trace(path: str, items: Sequence[WorkloadItem]) -> None:
+    """Write a workload as JSON lines (one request per line, sorted by t)."""
+    with open(path, "w") as f:
+        for it in sorted(items, key=lambda it: it.t):
+            f.write(json.dumps(it.to_json()) + "\n")
+
+
+def load_trace(path: str) -> List[WorkloadItem]:
+    with open(path) as f:
+        items = [WorkloadItem.from_json(json.loads(line))
+                 for line in f if line.strip()]
+    return sorted(items, key=lambda it: it.t)
+
+
+# ---------------------------------------------------------------------------
+# Clocks + driver
+# ---------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """Deterministic clock: one engine tick advances time by ``tick_cost``
+    units, and idle gaps fast-forward to the next arrival instantly."""
+
+    def __init__(self, tick_cost: float = 1.0):
+        self.tick_cost = tick_cost
+        self.now = 0.0
+        self.busy_seconds = 0.0   # filled by drive()
+
+    def tick(self) -> None:
+        self.now += self.tick_cost
+
+    def skip_to(self, t: float) -> None:
+        self.now = max(self.now, t)
+
+
+class WallClock:
+    """Real time (seconds since construction); idle gaps are slept away."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self.busy_seconds = 0.0   # filled by drive()
+
+    @property
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def tick(self) -> None:
+        pass
+
+    def skip_to(self, t: float) -> None:
+        dt = t - self.now
+        if dt > 0:
+            time.sleep(dt)
+
+
+def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
+          clock=None, max_ticks: int = 1_000_000) -> List[Request]:
+    """Replay a workload against an engine: submit each item when the clock
+    reaches its arrival time, tick the engine until fully drained.  Returns
+    the Request objects (all done) in arrival order.
+
+    Sets ``clock.busy_seconds`` to the wall time spent inside
+    ``engine.step()`` (idle waits for arrivals excluded), so wall-clock
+    callers can derive an honest per-tick cost even at low arrival rates.
+    """
+    if clock is None:
+        clock = VirtualClock()
+    pending = sorted(items, key=lambda it: it.t)
+    reqs: List[Request] = []
+    i = 0
+    busy = 0.0
+    for _ in range(max_ticks):
+        if i < len(pending) and not engine.has_work():
+            clock.skip_to(pending[i].t)  # idle: jump/sleep to next arrival
+        while i < len(pending) and pending[i].t <= clock.now:
+            it = pending[i]
+            reqs.append(engine.submit(list(it.prompt), it.max_new_tokens,
+                                      it.eos_id))
+            i += 1
+        if not engine.has_work() and i >= len(pending):
+            clock.busy_seconds = busy
+            return reqs
+        t0 = time.perf_counter()
+        engine.step()
+        busy += time.perf_counter() - t0
+        clock.tick()
+    raise RuntimeError(f"workload did not drain within {max_ticks} ticks "
+                       f"({i}/{len(pending)} submitted)")
+
+
+def offered_load(items: Sequence[WorkloadItem],
+                 duration: Optional[float] = None) -> float:
+    """Offered tokens per clock unit (prompt + decode), for sizing sweeps.
+    ``duration`` is the workload span; when omitted (e.g. a replayed trace
+    with no declared span) the last arrival time stands in for it."""
+    if not items:
+        return 0.0
+    span = duration if duration else max(it.t for it in items)
+    if span <= 0:
+        return math.inf
+    toks = sum(len(it.prompt) + it.max_new_tokens for it in items)
+    return toks / span

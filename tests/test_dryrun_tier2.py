@@ -1,0 +1,53 @@
+"""tier2: 512-fake-device dry-run smoke over the full (arch x shape) grid.
+
+Every applicable cell of the assignment grid must lower + compile against
+the 2x16x16 multi-pod production mesh (512 fake host devices) — the
+full-scale analogue of the 8-device smoke in tests/test_sharding.py, and
+the ROADMAP's "dry-run at 512 fake devices across the whole grid in CI"
+item.  Each cell runs in its own subprocess because jax locks the device
+count at first initialization (see repro.launch.dryrun).
+
+Deselected by default (pytest.ini: ``-m "not tier2"``); the scheduled /
+manually-dispatched job in .github/workflows/tier2.yml runs it with
+``-m tier2``.  One cell can take minutes: full-size models, CPU XLA.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import grid
+
+GRID = [(cfg.name, shape.name) for cfg, shape, runs, _ in grid() if runs]
+
+CELL = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from repro.launch.dryrun import run_cell
+
+cell = run_cell(sys.argv[1], sys.argv[2], multi_pod=True, pieces=False)
+cell.pop("traceback", None)
+print("CELL_JSON=" + json.dumps(
+    {k: cell.get(k) for k in ("ok", "skip", "error", "chips", "wall_s")}))
+"""
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("arch,shape", GRID,
+                         ids=[f"{a}-{s}" for a, s in GRID])
+def test_dryrun_grid_cell_512_devices(arch, shape):
+    r = subprocess.run(
+        [sys.executable, "-c", CELL, arch, shape],
+        capture_output=True, text=True, timeout=3600,
+        env={**os.environ, "PYTHONPATH": "src",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = next(l for l in r.stdout.splitlines() if l.startswith("CELL_JSON="))
+    cell = json.loads(line[len("CELL_JSON="):])
+    assert cell["ok"] is True, cell
+    assert cell["chips"] == 512

@@ -63,3 +63,54 @@ def test_max_len_truncates(setup):
     eng.run()
     assert r.done
     assert len(r.output) <= 32
+
+
+# ------------------------------------------------- prompt-capacity boundary
+# Regression tests for the old silent truncation: _admit used to drop the
+# prompt tail to max_len - max_new_tokens - 1 tokens with no signal.
+
+
+def test_prompt_at_capacity_accepted_and_fully_used(setup):
+    """A prompt of exactly max_len - 1 tokens is admitted whole: its first
+    greedy token matches the same prompt on a roomier engine, so the tail
+    provably reached the model."""
+    cfg, model, params, sharder = setup
+    prompt = [(7 * i) % cfg.vocab_size for i in range(31)]   # max_len - 1
+    tight = ServingEngine(model, params, sharder, max_batch=1, max_len=32)
+    r_tight = tight.submit(list(prompt), max_new_tokens=4)
+    tight.run()
+    roomy = ServingEngine(model, params, sharder, max_batch=1, max_len=64)
+    r_roomy = roomy.submit(list(prompt), max_new_tokens=4)
+    roomy.run()
+    assert r_tight.done and not r_tight.truncated
+    assert r_tight.output[0] == r_roomy.output[0]
+    # 4 requested tokens can't follow a 31-token prompt in a 32-slot
+    # cache: flagged at submit, not silently cut at the end of the run
+    assert r_tight.capped and len(r_tight.output) == 2
+    assert not r_roomy.capped and len(r_roomy.output) == 4
+
+
+def test_prompt_past_capacity_rejected(setup):
+    eng = _engine(setup)   # max_len = 32
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(32)), max_new_tokens=4)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([], max_new_tokens=4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2], max_new_tokens=0)
+    # the engine stays serviceable after a rejected submit
+    ok = eng.submit(list(range(31)), max_new_tokens=2)
+    eng.run()
+    assert ok.done
+
+
+def test_prompt_past_capacity_opt_in_truncation(setup, caplog):
+    cfg, model, params, sharder = setup
+    eng = ServingEngine(model, params, sharder, max_batch=1, max_len=32,
+                        truncate_prompts=True)
+    with caplog.at_level("WARNING", logger="repro.serving"):
+        r = eng.submit(list(range(40)), max_new_tokens=2)
+    assert r.truncated and len(r.prompt) == 31
+    assert any("truncating prompt" in m for m in caplog.messages)
+    eng.run()
+    assert r.done

@@ -1,0 +1,133 @@
+"""Workload generators + metrics aggregator: pure, model-free tests."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request
+from repro.serving import metrics as sm
+from repro.serving import workload as wl
+
+
+# ---------------------------------------------------------------- arrivals
+
+
+def test_poisson_seeded_determinism():
+    a = wl.poisson_arrivals(0.5, 100.0, np.random.default_rng(7))
+    b = wl.poisson_arrivals(0.5, 100.0, np.random.default_rng(7))
+    assert a == b
+    assert all(0 < t < 100.0 for t in a)
+    assert a == sorted(a)
+
+
+def test_poisson_rate_scaling():
+    rng = np.random.default_rng(0)
+    n_slow = len(wl.poisson_arrivals(0.2, 500.0, rng))
+    rng = np.random.default_rng(0)
+    n_fast = len(wl.poisson_arrivals(2.0, 500.0, rng))
+    # E[n] = 100 vs 1000; seeded draws sit well within loose bounds
+    assert 50 < n_slow < 200
+    assert 700 < n_fast < 1400
+
+
+def test_mmpp_valid_and_bursty():
+    rng = np.random.default_rng(3)
+    times = wl.mmpp_arrivals((0.2, 4.0), (20.0, 10.0), 400.0, rng)
+    assert times == sorted(times)
+    assert all(0 < t < 400.0 for t in times)
+    # burst state at 20x the quiet rate must beat the all-quiet expectation
+    assert len(times) > 0.2 * 400.0
+
+
+def test_make_workload_deterministic_and_bounded():
+    kw = dict(rate=1.0, duration=50.0, seed=11, vocab_size=503,
+              prompt_len=(4, 12), max_new_tokens=(8, 16))
+    a = wl.make_workload("poisson", **kw)
+    b = wl.make_workload("poisson", **kw)
+    assert a == b
+    for it in a:
+        assert 4 <= len(it.prompt) <= 12
+        assert 8 <= it.max_new_tokens <= 16
+        assert all(0 <= tok < 503 for tok in it.prompt)
+
+
+def test_make_workload_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        wl.make_workload("uniform", rate=1.0, duration=1.0, seed=0,
+                         vocab_size=10)
+
+
+def test_trace_round_trip(tmp_path):
+    items = wl.make_workload("mmpp", rate=0.5, duration=40.0, seed=5,
+                             vocab_size=100)
+    path = str(tmp_path / "trace.jsonl")
+    wl.save_trace(path, items)
+    assert wl.load_trace(path) == sorted(items, key=lambda it: it.t)
+    # and the trace kind replays the file verbatim
+    again = wl.make_workload("trace", rate=0.0, duration=0.0, seed=0,
+                             vocab_size=0, trace_path=path)
+    assert again == wl.load_trace(path)
+
+
+def test_offered_load():
+    items = [wl.WorkloadItem(1.0, (1, 2), 3), wl.WorkloadItem(2.0, (1,), 4)]
+    # declared duration divides the real span, not the last-arrival time
+    assert wl.offered_load(items, 5.0) == pytest.approx(10 / 5.0)
+    # no duration (trace replay): last arrival stands in
+    assert wl.offered_load(items) == pytest.approx(10 / 2.0)
+    assert wl.offered_load([]) == 0.0
+
+
+def test_virtual_clock_skip_never_rewinds():
+    c = wl.VirtualClock()
+    c.tick(); c.tick()
+    c.skip_to(1.0)        # behind now: no-op
+    assert c.now == 2.0
+    c.skip_to(10.0)
+    assert c.now == 10.0
+
+
+# ----------------------------------------------------------------- metrics
+
+
+def test_percentile_nearest_rank():
+    xs = list(range(1, 101))           # 1..100
+    assert sm.percentile(xs, 50) == 50
+    assert sm.percentile(xs, 95) == 95
+    assert sm.percentile(xs, 99) == 99
+    assert sm.percentile([7.0], 99) == 7.0
+    assert math.isnan(sm.percentile([], 50))
+
+
+def _req(t_submit, t_admit, t_done, n_out):
+    r = Request(0, [1], max_new_tokens=n_out)
+    r.output = list(range(n_out))
+    r.done = True
+    r.t_submit, r.t_admit, r.t_first, r.t_done = (t_submit, t_admit,
+                                                  t_admit, t_done)
+    return r
+
+
+def test_request_metrics_definitions():
+    m = sm.request_metrics(_req(t_submit=2, t_admit=5, t_done=12, n_out=8))
+    assert m["queue_wait"] == 3            # 5 - 2
+    assert m["ttft"] == 4                  # 5 - 2 + 1 (prefill tick counts)
+    assert m["tpot"] == pytest.approx(7 / 7)   # (12-5) / (8-1)
+    # one-token request: no decode phase, no TPOT sample
+    m1 = sm.request_metrics(_req(0, 0, 0, n_out=1))
+    assert "tpot" not in m1
+    # unfinished request contributes nothing
+    r = Request(0, [1])
+    assert sm.request_metrics(r) is None
+
+
+def test_aggregate_scaling_and_counts():
+    reqs = [_req(0, 0, 6, 4), _req(1, 3, 9, 4), Request(9, [1])]
+    agg = sm.aggregate(reqs, ticks=10, util_history=[0.5, 1.0],
+                       tick_seconds=2.0)
+    assert agg["completed"] == 2 and agg["submitted"] == 3
+    assert agg["tokens"] == 8
+    assert agg["queue_wait"]["p99"] == 2 * 2.0     # ticks * tick_seconds
+    assert agg["tokens_per_sec"] == pytest.approx(8 / 20.0)
+    assert agg["mean_util"] == pytest.approx(0.75)
