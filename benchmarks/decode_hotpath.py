@@ -1,0 +1,173 @@
+"""Decode hot-path microbenchmark: host-sync cost vs on-device chunking.
+
+The paper's thesis at host granularity: per-tick host round-trips (sample
+on host, read lengths, relaunch) are the serving analogue of per-kernel
+data movement.  This benchmark measures exactly that lever on the
+continuous-batching engine — for a grid of ``sync_every`` (decode ticks
+per host sync) and prefill config (bucketed batched vs legacy exact-length
+batch-1) it runs a warmed-up closed-loop workload and reports:
+
+* ``syncs_per_tick`` — blocking host↔device readbacks per engine tick
+  (deterministic: a pure function of the schedule);
+* ``s_per_tick`` / ``tokens_per_sec`` — measured wall numbers
+  (host-noisy);
+* ``prefill_compiles`` — distinct prefill programs XLA built for the
+  mixed-length arrivals (deterministic; ≤ bucket count in bucketed mode).
+
+  PYTHONPATH=src python -m benchmarks.decode_hotpath [--arch rwkv6-1.6b]
+      [--out BENCH_decode_hotpath.json]
+
+The committed ``BENCH_decode_hotpath.json`` is part of the perf
+trajectory: ``deterministic`` blocks must be byte-stable for a fixed
+seed; ``wall`` blocks are machine-dependent context.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Iterator, List, Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.dist.sharding import make_sharder
+from repro.models.lm import build_model
+from repro.serving import ServingEngine
+from repro.testing import reduced_config
+
+SCHEMA = "decode_hotpath/v1"
+DEFAULT_OUT = "BENCH_decode_hotpath.json"
+SYNC_EVERYS = (1, 2, 4, 8)
+
+
+def _workload(vocab_size: int, n_requests: int, seed: int):
+    """Seeded mixed-length closed-loop prompts (pure function of seed)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_requests):
+        n = int(rng.integers(3, 21))
+        out.append([int(x) for x in rng.integers(0, vocab_size, n)])
+    return out
+
+
+def run_config(model, params, sharder, vocab_size: int, *,
+               sync_every: int, bucketed: bool, n_requests: int = 8,
+               max_new: int = 32, max_batch: int = 4, max_len: int = 64,
+               seed: int = 0) -> Dict[str, object]:
+    """Measure one (sync_every, bucketed) point: warm the jit caches with
+    one full closed-loop pass, reset telemetry, then time a second pass."""
+    engine = ServingEngine(model, params, sharder, max_batch=max_batch,
+                           max_len=max_len, seed=seed,
+                           sync_every=sync_every, bucketed_prefill=bucketed)
+    prompts = _workload(vocab_size, n_requests, seed)
+    for warm in (True, False):
+        if warm:
+            for p in prompts:
+                engine.submit(list(p), max_new_tokens=max_new)
+            engine.run()
+            engine.reset_telemetry()
+            continue
+        for p in prompts:
+            engine.submit(list(p), max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        engine.run()
+        dt = time.perf_counter() - t0
+    s = engine.stats()
+    ticks = max(1, int(s["ticks"]))
+    return {
+        "sync_every": sync_every,
+        "bucketed_prefill": bucketed,
+        "n_requests": n_requests,
+        "max_new": max_new,
+        "max_batch": max_batch,
+        "deterministic": {  # pure function of (workload seed, config)
+            "ticks": int(s["ticks"]),
+            "tokens": int(s["total_tokens"]),
+            "host_syncs": int(s["host_syncs"]),
+            "decode_chunks": int(s["decode_chunks"]),
+            "prefill_calls": int(s["prefill_calls"]),
+            "prefill_compiles": int(s["prefill_compiles"]),
+            "syncs_per_tick": s["host_syncs"] / ticks,
+        },
+        "wall": {  # host-dependent; excluded from determinism
+            "seconds": dt,
+            "s_per_tick": dt / ticks,
+            "tokens_per_sec": s["total_tokens"] / dt if dt else 0.0,
+        },
+    }
+
+
+def measure(arch: str = "rwkv6-1.6b", *, reduced: bool = True, seed: int = 0,
+            sync_everys: Sequence[int] = SYNC_EVERYS,
+            bucket_configs: Sequence[bool] = (True, False),
+            n_requests: int = 8, max_new: int = 32) -> Dict[str, object]:
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sharder = make_sharder(cfg, None, "decode")
+    cells: List[Dict[str, object]] = []
+    for bucketed in bucket_configs:
+        for se in sync_everys:
+            cells.append(run_config(model, params, sharder, cfg.vocab_size,
+                                    sync_every=se, bucketed=bucketed,
+                                    n_requests=n_requests, max_new=max_new,
+                                    seed=seed))
+    return {"schema": SCHEMA, "arch": arch, "reduced": reduced, "seed": seed,
+            "cells": cells}
+
+
+def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def _rows(doc: Dict[str, object]) -> Iterator[Row]:
+    for c in doc["cells"]:
+        d, w = c["deterministic"], c["wall"]
+        name = (f"decode_hotpath/{doc['arch']}/"
+                f"{'bucketed' if c['bucketed_prefill'] else 'batch1'}"
+                f"/sync{c['sync_every']}")
+        yield Row(
+            name,
+            w["s_per_tick"] * 1e6,
+            f"syncs_per_tick={d['syncs_per_tick']:.3f}"
+            f" tok_per_s={w['tokens_per_sec']:.1f}"
+            f" ticks={d['ticks']}"
+            f" prefill_compiles={d['prefill_compiles']}")
+
+
+def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
+    """benchmarks.run harness entry.  ``smoke`` runs a 2-point grid and
+    does NOT refresh BENCH_decode_hotpath.json."""
+    if smoke:
+        doc = measure(sync_everys=(1, 4), bucket_configs=(True,),
+                      n_requests=4, max_new=8)
+    else:
+        doc = measure(n_requests=8 if fast else 16,
+                      max_new=32 if fast else 64)
+        write(doc)
+    yield from _rows(doc)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--full-size", action="store_true",
+                    help="full-size config (default: reduced, CPU-friendly)")
+    args = ap.parse_args()
+    doc = measure(args.arch, reduced=not args.full_size, seed=args.seed)
+    write(doc, args.out)
+    print(f"wrote {args.out}: {len(doc['cells'])} cells")
+    for row in _rows(doc):
+        print(" ", row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,24 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only NAME]
 
 Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs every suite in a tiny configuration (a couple of cells,
+short sequences) and never rewrites the committed BENCH_*.json trajectory
+files — it exists so tier-1 CI can prove the benchmark scripts still run
+between the real (weekly / manual) sweeps.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
 from benchmarks import (
+    decode_hotpath,
     energy,
     fig4_fragmentation,
     roofline_table,
@@ -27,6 +34,7 @@ SUITES = {
     "energy": energy,
     "roofline_table": roofline_table,
     "serving_load": serving_load,
+    "decode_hotpath": decode_hotpath,
 }
 
 
@@ -34,6 +42,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full timesteps for measured benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, no BENCH_*.json writes (CI guard)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
@@ -42,8 +52,11 @@ def main() -> None:
     for name, mod in SUITES.items():
         if args.only and args.only != name:
             continue
+        kwargs = {"fast": not args.full}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            for row in mod.run(fast=not args.full):
+            for row in mod.run(**kwargs):
                 print(row.csv(), flush=True)
         except Exception as e:  # noqa: BLE001 — keep the harness running
             failed.append(name)

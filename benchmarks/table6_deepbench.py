@@ -25,14 +25,18 @@ from repro.core import dse
 from repro.core.cells import RNNCellConfig, init_weights, quantize_weights, serve
 
 
-def run(fast: bool = True) -> List[Row]:
+def run(fast: bool = True, smoke: bool = False) -> List[Row]:
+    # smoke (tier-1 CI): two small tasks, 2 measured steps — just proves
+    # the measured path (both execution models + the DSE) still runs
+    tasks = DEEPBENCH_TASKS[:2] if smoke else DEEPBENCH_TASKS
     rows: List[Row] = []
-    for task in DEEPBENCH_TASKS:
+    for task in tasks:
         cfg = RNNCellConfig(task.cell, task.hidden,
                             timesteps=task.timesteps, batch=1,
                             precision="int8")
         w = quantize_weights(cfg, init_weights(cfg, jax.random.PRNGKey(0)))
-        t_meas = min(task.timesteps, 8 if fast else task.timesteps)
+        t_meas = min(task.timesteps, 2 if smoke else (8 if fast else
+                                                      task.timesteps))
         x = jax.random.normal(jax.random.PRNGKey(1), (t_meas, 1, cfg.d),
                               jnp.bfloat16)
 

@@ -46,6 +46,16 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="workload + sampler seed")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="decode ticks per host sync: the fused on-device "
+                         "decode loop runs this many ticks between host "
+                         "interventions (admission/retire)")
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"),
+                    help="admission order: FCFS or shortest-prompt-first")
+    ap.add_argument("--no-bucketed-prefill", action="store_true",
+                    help="legacy exact-length batch-1 prefill per request "
+                         "(compiles per distinct prompt length) instead of "
+                         "length-bucketed batched prefill")
     # open-loop arrival process (the paper's asynchronous-serving scenario)
     ap.add_argument("--arrival", default="batch",
                     choices=("batch",) + wl.ARRIVAL_KINDS,
@@ -83,7 +93,9 @@ def main() -> None:
                            max_batch=args.max_batch, max_len=args.max_len,
                            sampler=SamplerConfig(temperature=args.temperature),
                            seed=args.seed,
-                           truncate_prompts=args.truncate_prompts)
+                           truncate_prompts=args.truncate_prompts,
+                           sync_every=args.sync_every, policy=args.policy,
+                           bucketed_prefill=not args.no_bucketed_prefill)
 
     if args.arrival == "batch":
         rng = np.random.default_rng(args.seed)
@@ -116,9 +128,10 @@ def main() -> None:
           f"{shown:g} {args.clock}-clock units "
           f"(offered {wl.offered_load(items, span):.2f} tok/unit)")
     if args.clock == "wall":
-        # warm the decode + per-prompt-length prefill jit caches so
-        # tick_seconds measures steady-state serving, not XLA compiles
-        for n in sorted({len(it.prompt) for it in items}):
+        # warm the fused decode chunk + the prefill jit cache (one compile
+        # per length *bucket* the workload will hit) so tick_seconds
+        # measures steady-state serving, not XLA compiles
+        for n in sorted({engine.bucket(len(it.prompt)) for it in items}):
             engine.submit([1] * n, max_new_tokens=2)
         engine.run()
         engine.reset_telemetry()
@@ -134,6 +147,13 @@ def main() -> None:
                              util_history=engine.util_history,
                              tick_seconds=tick_s)
     print(smetrics.format_summary(agg))
+    s = engine.stats()
+    print(f"hot path: {s['host_syncs']} host syncs / {s['ticks']} ticks "
+          f"({s['host_syncs'] / max(1, s['ticks']):.2f}/tick, "
+          f"sync_every={args.sync_every}), "
+          f"{s['prefill_calls']} prefill calls over "
+          f"{s['prefill_compiles']} compiled shapes, "
+          f"{s['instant_admits']} instant admits")
     if args.clock == "wall":
         print(f"wall: {dt:.2f}s, {agg['tokens'] / dt:.1f} tok/s measured")
 

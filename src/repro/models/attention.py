@@ -266,26 +266,26 @@ def update_cache(k_cache, v_cache, kv_pos, k_new, v_new, lengths, *,
     return k_cache, v_cache, kv_pos
 
 
-def fill_cache_from_prefill(k, v, n_slots: int):
-    """Build (cache, positions) from prefill-computed k/v (B, S, K, hd).
-    Keeps the last ``n_slots`` tokens (ring layout: slot = pos % n_slots);
-    pads with empty (-1 position) slots when the cache is larger than S."""
+def fill_cache_from_prefill(k, v, positions, n_slots: int):
+    """Build (cache, cache_pos) from prefill-computed k/v (B, S, K, hd).
+
+    ``positions`` (B, S) carries each token's absolute position, -1 for
+    padding (right-padded bucketed prefill), so examples in one batch may
+    have different true lengths.  Per example, the last ``n_slots`` *valid*
+    tokens are kept at their ring slots (slot = pos % n_slots); unfilled
+    slots get pos -1 — decode attention masks them, and the decode-side
+    cache update (`update_cache` semantics, slot = lengths % n_slots)
+    overwrites them in the same layout.
+    """
     B, S, K, hd = k.shape
-    if n_slots >= S:
-        pad = n_slots - S
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        if pad:
-            zk = jnp.zeros((B, pad, K, hd), k.dtype)
-            k = jnp.concatenate([k, zk], axis=1)
-            v = jnp.concatenate([v, jnp.zeros((B, pad, K, hd), v.dtype)], axis=1)
-            pos = jnp.concatenate(
-                [pos, -jnp.ones((B, pad), jnp.int32)], axis=1)
-        return k, v, pos
-    # last n_slots tokens, placed at their ring positions
-    tail_pos = jnp.arange(S - n_slots, S, dtype=jnp.int32)       # (n,)
-    slots = tail_pos % n_slots
-    kt = jax.lax.slice_in_dim(k, S - n_slots, S, axis=1)
-    vt = jax.lax.slice_in_dim(v, S - n_slots, S, axis=1)
-    order = jnp.argsort(slots)                                    # static perm
-    pos = jnp.broadcast_to(tail_pos[order], (B, n_slots))
-    return kt[:, order], vt[:, order], pos
+    lengths = jnp.sum((positions >= 0).astype(jnp.int32), axis=1)  # (B,)
+    s = jnp.arange(n_slots, dtype=jnp.int32)[None, :]              # (1, n)
+    last = lengths[:, None] - 1                                    # (B, 1)
+    # token position landing in slot s: the largest valid p with
+    # p % n_slots == s (>= lengths - n_slots by construction of the mod)
+    p = last - ((last - s) % n_slots)                              # (B, n)
+    idx = jnp.maximum(p, 0)[:, :, None, None]
+    kc = jnp.take_along_axis(k, idx, axis=1)
+    vc = jnp.take_along_axis(v, idx, axis=1)
+    pos = jnp.where(p >= 0, p, -1).astype(jnp.int32)
+    return kc, vc, pos

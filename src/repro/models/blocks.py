@@ -130,7 +130,7 @@ def _attn_seq(params, x, cfg: ModelConfig, sharder, positions, *,
     entry = None
     if mode == "prefill":
         n_slots = min(window, max_len or S) if window else (max_len or S)
-        kc, vc, pc = attn.fill_cache_from_prefill(k, v, n_slots)
+        kc, vc, pc = attn.fill_cache_from_prefill(k, v, pos2d, n_slots)
         entry = _encode_kv(cfg, kc, vc)
         entry["pos"] = pc.astype(jnp.int32)
     return out, entry
@@ -210,10 +210,16 @@ def apply_block(params, x, cfg: ModelConfig, kind: str, sharder, *,
                 positions=None, lengths=None, mode: str = "train",
                 cache: Optional[Dict] = None, enc_out=None,
                 causal: bool = True, max_len: int = 0):
-    """Returns (x, new_cache_entry, aux_loss)."""
+    """Returns (x, new_cache_entry, aux_loss).
+
+    In prefill mode ``lengths`` (when not None) marks each example's true
+    prompt length within a right-padded batch: recurrent state updates are
+    masked to the identity on padded steps (bucketed batched prefill);
+    attention masks padding through the -1 entries of ``positions``."""
     if kind == "rwkv":
-        x, new_cache = rwkv_lib.rwkv_block(params, x, cfg, sharder,
-                                           mode=mode, cache=cache)
+        x, new_cache = rwkv_lib.rwkv_block(
+            params, x, cfg, sharder, mode=mode, cache=cache,
+            lengths=lengths if mode == "prefill" else None)
         if mode == "train":
             new_cache = None
         return x, new_cache, jnp.zeros((), F32)
@@ -235,8 +241,9 @@ def apply_block(params, x, cfg: ModelConfig, kind: str, sharder, *,
             a_out, a_cache = _attn_seq(params["attn"], h, cfg, sharder,
                                        positions, window=window, mode=mode,
                                        causal=causal, max_len=max_len)
-        s_out, s_cache = ssm_lib.ssm_mixer(params["ssm"], h, cfg, sharder,
-                                           mode=mode, cache=sub_ssm)
+        s_out, s_cache = ssm_lib.ssm_mixer(
+            params["ssm"], h, cfg, sharder, mode=mode, cache=sub_ssm,
+            lengths=lengths if mode == "prefill" else None)
         fused = 0.5 * (rmsnorm(a_out, params["attn_out_norm"], cfg.norm_eps)
                        + rmsnorm(s_out, params["ssm_out_norm"], cfg.norm_eps))
         x = x + fused

@@ -232,26 +232,50 @@ class LM:
 
     # ---------------------------------------------------------------- prefill
     def prefill(self, params, batch, sharder: Sharder, max_len: int = 0):
-        """Full-sequence prefill.  Returns (cache, last_token_logits)."""
+        """Full-sequence prefill.  Returns (cache, last_token_logits).
+
+        ``batch["lengths"]`` (B,) int32, when present, marks each example's
+        true prompt length within a right-padded batch (bucketed batched
+        prefill): padding positions are masked out of attention (position
+        -1), recurrent-state updates on padded steps are forced to the
+        identity, the returned logits are read at each example's last
+        *valid* token, and the cache records the true lengths — so one
+        padded batched call is equivalent to per-example exact-length
+        prefills.  (MoE routing is the one approximate spot: padded tokens
+        still compete for expert capacity.)"""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
         max_len = max_len or S
+        lengths = batch.get("lengths")
         positions = batch.get("positions")
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
                                          (B, S))
+        if lengths is not None:
+            lengths = lengths.astype(jnp.int32)
+            valid = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                     < lengths[:, None])                          # (B, S)
+            vmask = valid if positions.ndim == 2 else valid[:, None, :]
+            positions = jnp.where(vmask, positions, -1)
         enc_out = None
         if cfg.is_encoder_decoder:
             enc_out = self.encode(params, batch["frames"], sharder,
                                   mode="prefill")
         x = self.embed_tokens(params, tokens, sharder)
         x, caches, _ = self._scan(params["blocks"], x, positions=positions,
-                                  mode="prefill", sharder=sharder,
-                                  enc_out=enc_out, max_len=max_len)
-        logits = self.final_hidden_to_logits(params, x[:, -1:, :], sharder)
-        cache = {"blocks": caches,
-                 "lengths": jnp.full((B,), S, jnp.int32)}
+                                  lengths=lengths, mode="prefill",
+                                  sharder=sharder, enc_out=enc_out,
+                                  max_len=max_len)
+        if lengths is None:
+            h_last = x[:, -1:, :]
+            cache_lengths = jnp.full((B,), S, jnp.int32)
+        else:
+            idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+            h_last = jnp.take_along_axis(x, idx, axis=1)
+            cache_lengths = lengths
+        logits = self.final_hidden_to_logits(params, h_last, sharder)
+        cache = {"blocks": caches, "lengths": cache_lengths}
         return cache, logits[:, 0]
 
     # ----------------------------------------------------------------- decode

@@ -109,14 +109,34 @@ def _heads(x: jax.Array, hd: int) -> jax.Array:
     return x.reshape(B, T, d // hd, hd).transpose(0, 2, 1, 3)  # (B,H,T,hd)
 
 
+def _last_valid(x: jax.Array, lengths: Optional[jax.Array]) -> jax.Array:
+    """x (B, T, d) -> the last *valid* token per example (B, d): x[:, -1]
+    when lengths is None, else x[b, lengths[b]-1] (right-padded batch)."""
+    if lengths is None:
+        return x[:, -1, :]
+    idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0, :]
+
+
 def time_mix(params, x: jax.Array, cfg: ModelConfig, sharder, *,
              prev: Optional[jax.Array] = None,
-             state: Optional[jax.Array] = None):
-    """Full-sequence wkv.  x: (B, T, d).  Returns (out, new_shift, new_state)."""
+             state: Optional[jax.Array] = None,
+             lengths: Optional[jax.Array] = None):
+    """Full-sequence wkv.  x: (B, T, d).  Returns (out, new_shift, new_state).
+
+    ``lengths`` (B,) marks true per-example lengths in a right-padded
+    batch: padded steps are forced to (decay 1, k 0) so they leave the
+    recurrent state untouched — the same identity trick
+    chunked_linear_attention uses for its own chunk padding."""
     hd = cfg.rwkv.head_dim
     H = cfg.d_model // hd
     xs = _shift_seq(x, prev)
     r, k, v, g, log_decay = _time_mix_inputs(params, x, xs, cfg)
+    if lengths is not None:
+        valid = (jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+                 < lengths[:, None])[..., None]                  # (B, T, 1)
+        k = jnp.where(valid, k, 0.0)
+        log_decay = jnp.where(valid, log_decay, 0.0)
     rh, kh, vh = _heads(r, hd), _heads(k, hd), _heads(v, hd)
     wh = _heads(log_decay, hd)
     u = params["bonus"].astype(F32).reshape(H, hd)
@@ -127,7 +147,7 @@ def time_mix(params, x: jax.Array, cfg: ModelConfig, sharder, *,
     y = y.transpose(0, 2, 1, 3).reshape(x.shape)
     y = groupnorm_heads(y.astype(x.dtype), params["wkv_norm"], H, cfg.norm_eps)
     out = dot(y * g, params["wo"])
-    return out, x[:, -1, :], new_state
+    return out, _last_valid(x, lengths), new_state
 
 
 def time_mix_step(params, x: jax.Array, cfg: ModelConfig, sharder, *,
@@ -149,7 +169,8 @@ def time_mix_step(params, x: jax.Array, cfg: ModelConfig, sharder, *,
 
 
 def channel_mix(params, x: jax.Array, cfg: ModelConfig, sharder, *,
-                prev: Optional[jax.Array] = None):
+                prev: Optional[jax.Array] = None,
+                lengths: Optional[jax.Array] = None):
     """Squared-relu channel mix.  Returns (out, new_shift)."""
     xs = _shift_seq(x, prev)
     dx = xs - x
@@ -159,12 +180,14 @@ def channel_mix(params, x: jax.Array, cfg: ModelConfig, sharder, *,
     kk = sharder.constrain(kk, "batch", "seq", "mlp")
     r = jax.nn.sigmoid(dot(xr, params["wr_c"]))
     out = r * dot(kk, params["wv_c"])
-    return out, x[:, -1, :]
+    return out, _last_valid(x, lengths)
 
 
 def rwkv_block(params, x: jax.Array, cfg: ModelConfig, sharder, *,
-               mode: str, cache: Optional[Dict] = None):
-    """Full rwkv block.  Returns (x, new_cache)."""
+               mode: str, cache: Optional[Dict] = None,
+               lengths: Optional[jax.Array] = None):
+    """Full rwkv block.  Returns (x, new_cache).  ``lengths`` masks padded
+    steps of a right-padded prefill batch (see time_mix)."""
     if mode == "decode":
         h, tm_shift, state = time_mix_step(
             params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg, sharder,
@@ -181,11 +204,11 @@ def rwkv_block(params, x: jax.Array, cfg: ModelConfig, sharder, *,
     state = cache["wkv_state"] if cache else None
     h, tm_shift, state = time_mix(
         params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg, sharder,
-        prev=prev_tm, state=state)
+        prev=prev_tm, state=state, lengths=lengths)
     x = x + h
     h, cm_shift = channel_mix(
         params, rmsnorm(x, params["ln2"], cfg.norm_eps), cfg, sharder,
-        prev=prev_cm)
+        prev=prev_cm, lengths=lengths)
     x = x + h
     new_cache = {"wkv_state": state.astype(F32), "tm_shift": tm_shift,
                  "cm_shift": cm_shift}

@@ -79,10 +79,16 @@ def _causal_depthwise_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
     return out + bias.astype(x.dtype)
 
 
-def _ssm_inputs(params, x: jax.Array, cfg: ModelConfig, conv_tail):
+def _ssm_inputs(params, x: jax.Array, cfg: ModelConfig, conv_tail,
+                lengths: Optional[jax.Array] = None):
     """Shared train/decode input computation.
 
-    Returns (q, k, v, log_decay, x_heads, z, new_conv_tail)."""
+    Returns (q, k, v, log_decay, x_heads, z, new_conv_tail).
+
+    ``lengths`` (B,) marks true per-example lengths in a right-padded
+    prefill batch; the conv tail is then gathered at the last valid
+    positions (zeros before t=0, matching the causal-conv zero padding).
+    Only supported for fresh prefills (conv_tail None)."""
     s = cfg.ssm
     di, nh = _d_inner(cfg), _n_ssm_heads(cfg)
     B, T, _ = x.shape
@@ -90,9 +96,18 @@ def _ssm_inputs(params, x: jax.Array, cfg: ModelConfig, conv_tail):
     xi, z = jnp.split(xz, 2, axis=-1)
     xc = _causal_depthwise_conv(xi, params["conv_kernel"], params["conv_bias"],
                                 conv_tail)
-    new_tail = (jnp.concatenate([conv_tail.astype(x.dtype), xi], axis=1)
-                [:, -(s.conv_width - 1):, :]
-                if conv_tail is not None else xi[:, -(s.conv_width - 1):, :])
+    if lengths is not None:
+        w1 = s.conv_width - 1
+        src = (lengths[:, None] - w1
+               + jnp.arange(w1, dtype=jnp.int32)[None, :])       # (B, W-1)
+        tail = jnp.take_along_axis(xi, jnp.maximum(src, 0)[:, :, None],
+                                   axis=1)
+        new_tail = jnp.where((src >= 0)[:, :, None], tail, 0.0)
+    else:
+        new_tail = (jnp.concatenate([conv_tail.astype(x.dtype), xi], axis=1)
+                    [:, -(s.conv_width - 1):, :]
+                    if conv_tail is not None
+                    else xi[:, -(s.conv_width - 1):, :])
     xc = jax.nn.silu(xc)
     bc = dot(xc, params["w_bc"]).astype(F32)
     b_t, c_t = jnp.split(bc, 2, axis=-1)                  # (B,T,N) each
@@ -124,8 +139,12 @@ def _finish(params, y: jax.Array, xh: jax.Array, z: jax.Array,
 
 
 def ssm_mixer(params, x: jax.Array, cfg: ModelConfig, sharder, *,
-              mode: str, cache: Optional[Dict] = None):
-    """SSD mixer.  x: (B, T, d).  Returns (out (B,T,d), new_cache)."""
+              mode: str, cache: Optional[Dict] = None,
+              lengths: Optional[jax.Array] = None):
+    """SSD mixer.  x: (B, T, d).  Returns (out (B,T,d), new_cache).
+
+    ``lengths`` masks padded steps of a right-padded prefill batch: padded
+    steps get (decay 1, k 0) so the ssd_state carries through unchanged."""
     s = cfg.ssm
     if mode == "decode":
         conv_tail, state = cache["conv_state"], cache["ssd_state"]
@@ -139,7 +158,13 @@ def ssm_mixer(params, x: jax.Array, cfg: ModelConfig, sharder, *,
 
     conv_tail = cache["conv_state"] if cache else None
     state = cache["ssd_state"] if cache else None
-    q, k, v, ld, xh, z, new_tail = _ssm_inputs(params, x, cfg, conv_tail)
+    q, k, v, ld, xh, z, new_tail = _ssm_inputs(params, x, cfg, conv_tail,
+                                               lengths=lengths)
+    if lengths is not None:
+        valid = (jnp.arange(x.shape[1], dtype=jnp.int32)[None, None, :, None]
+                 < lengths[:, None, None, None])                 # (B,1,T,1)
+        k = jnp.where(valid, k, 0.0)
+        ld = jnp.where(valid, ld, 0.0)
     y, new_state = chunked_linear_attention(
         q, k, v, ld, chunk=min(s.chunk, x.shape[1]),
         convention="inclusive", initial_state=state)

@@ -1,5 +1,9 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
-from repro.serving.metrics import aggregate, format_summary  # noqa: F401
+from repro.serving.metrics import (  # noqa: F401
+    aggregate,
+    format_summary,
+    scale_latencies,
+)
 from repro.serving.workload import (  # noqa: F401
     VirtualClock,
     WallClock,

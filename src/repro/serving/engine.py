@@ -1,14 +1,34 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching serving engine with an on-device hot path.
 
-The batched decode step (one jit-compiled program, fixed max_batch) runs
-every tick over all occupied slots; requests join by prefilling into a free
-slot and leave on EOS/length without disturbing the others — the standard
-continuous-batching scheme (Orca/vLLM) on a fixed-slot KV cache.  Slot
-insertion is a pytree scatter into the batch axis of the stacked cache.
+The batched decode step runs every tick over all occupied slots; requests
+join by prefilling into a free slot and leave on EOS/length without
+disturbing the others — the standard continuous-batching scheme
+(Orca/vLLM) on a fixed-slot KV cache.
 
-This engine is the transformer-serving analogue of the paper's real-time
-RNN serving scenario (batch-of-1 requests arriving asynchronously) and is
-exercised end-to-end by examples/serve_lm.py and the integration tests.
+The steady-state hot path is the paper's thesis applied at the host level:
+breaking the serving loop into per-kernel launches (decode, then a host
+round-trip to sample, then a host read of the lengths) wastes the machine
+on host↔device traffic exactly the way per-kernel launches waste it on
+inter-kernel data movement.  So the decode tick is ONE fused jit program —
+decode + sample + EOS/length done-mask + per-slot token writeback, with
+the PRNG key carried as state — and up to ``sync_every`` ticks run
+on-device between host syncs (a ``lax.while_loop`` that early-exits when
+every slot is done, or when a slot frees while requests are queued so the
+host can admit).  The host only intervenes to admit and retire.
+
+Admission is bucketed batched prefill: prompts are right-padded to
+power-of-two length buckets (capped at ``max_len - 1``) and all
+same-bucket admissions prefill in one fixed-batch call, so the number of
+prefill XLA compiles is bounded by the bucket count instead of the number
+of distinct prompt lengths, and bursty (MMPP) arrival spikes amortize
+into one program launch.  Slot insertion is one pytree scatter for the
+whole admitted group.  ``policy="spf"`` admits shortest-prompt-first
+(stable within a length) instead of FCFS.
+
+Virtual-clock semantics are unchanged: with the default ``sync_every=1``
+(and for any ``sync_every`` under ``workload.drive``'s arrival-bounded
+chunks) the tick-stamp schedule is bit-identical to the per-tick host
+loop, so the fused path is a pure wall-clock optimization.
 """
 
 from __future__ import annotations
@@ -17,7 +37,8 @@ import dataclasses
 import itertools
 import logging
 from collections import deque
-from typing import Dict, List, Optional
+from functools import partial
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +46,12 @@ import numpy as np
 
 from repro.dist.sharding import Sharder
 from repro.models.lm import LM
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import SamplerConfig, split_and_sample
 
 log = logging.getLogger("repro.serving")
+
+POLICIES = ("fcfs", "spf")
+MIN_BUCKET = 8   # smallest prefill length bucket (pow2 upward, cap max_len-1)
 
 
 @dataclasses.dataclass
@@ -49,11 +73,67 @@ class Request:
     t_done: Optional[int] = None    # tick the request completed
 
 
+def _decode_many(model: LM, sharder: Sharder, sampler: SamplerConfig,
+                 max_len: int, k: int,
+                 params, cache, tokens, key, active, eos, remaining,
+                 limit, stop_on_free):
+    """Up to ``min(k, limit)`` fused decode ticks on device, no host sync.
+
+    Per tick: decode_step + sample + done-mask (EOS / cache-full /
+    max_new_tokens) + per-slot token writeback, threading the PRNG key.
+    Early-exits when no slot is active, or — when ``stop_on_free`` — after
+    the first tick that frees a slot, so the host can admit a queued
+    request at exactly the tick the per-tick loop would have.
+
+    Returns (n_ticks, cache, key, toks (k,B), acts (k,B), dones (k,B));
+    rows >= n_ticks of the buffers are zero.
+    """
+    B = tokens.shape[0]
+    st = dict(i=jnp.int32(0), cache=cache, tokens=tokens, key=key,
+              active=active, remaining=remaining,
+              toks=jnp.zeros((k, B), jnp.int32),
+              acts=jnp.zeros((k, B), bool),
+              dones=jnp.zeros((k, B), bool),
+              freed=jnp.bool_(False))
+
+    def cond(st):
+        return ((st["i"] < limit) & st["active"].any()
+                & jnp.logical_not(stop_on_free & st["freed"]))
+
+    def body(st):
+        cache, logits = model.decode_step(params, st["cache"], st["tokens"],
+                                          sharder)
+        key, sampled = split_and_sample(st["key"], logits, sampler)
+        active = st["active"]
+        tokens = jnp.where(active, sampled, st["tokens"])
+        remaining = st["remaining"] - active.astype(jnp.int32)
+        hit_eos = (eos >= 0) & (sampled == eos)
+        full = cache["lengths"] >= max_len - 1
+        done_now = active & (hit_eos | full | (remaining <= 0))
+        i = st["i"]
+        return dict(
+            i=i + 1, cache=cache, tokens=tokens, key=key,
+            active=active & ~done_now, remaining=remaining,
+            toks=st["toks"].at[i].set(tokens),
+            acts=st["acts"].at[i].set(active),
+            dones=st["dones"].at[i].set(done_now),
+            freed=st["freed"] | done_now.any())
+
+    st = jax.lax.while_loop(cond, body, st)
+    return (st["i"], st["cache"], st["key"],
+            st["toks"], st["acts"], st["dones"])
+
+
 class ServingEngine:
     def __init__(self, model: LM, params, sharder: Sharder, *,
                  max_batch: int = 4, max_len: int = 128,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 truncate_prompts: bool = False):
+                 truncate_prompts: bool = False, sync_every: int = 1,
+                 policy: str = "fcfs", bucketed_prefill: bool = True):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+        if sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -61,19 +141,32 @@ class ServingEngine:
         self.max_len = max_len
         self.sampler = sampler
         self.truncate_prompts = truncate_prompts
+        self.sync_every = int(sync_every)
+        self.policy = policy
+        self.bucketed_prefill = bucketed_prefill
         self.cache = model.init_cache(max_batch, max_len)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.next_token = np.zeros((max_batch,), np.int32)
         self.queue: deque[Request] = deque()
+        # host mirrors of the per-slot device control vectors
+        self.next_token = np.zeros((max_batch,), np.int32)
+        self._active = np.zeros((max_batch,), bool)
+        self._eos = np.full((max_batch,), -1, np.int32)
+        self._remaining = np.zeros((max_batch,), np.int32)
         self.completed = 0        # requests finished since construction
         self.total_tokens = 0     # tokens generated (prefill + decode)
         self.finished: List[Request] = []   # completed Requests, in order
-        self.util_history: List[float] = []  # per-tick active/max_batch
+        self.util_history: List[float] = []  # per-tick (active+instant)/max
+        self.instant_admits = 0   # requests done at their prefill token
+        self.host_syncs = 0       # blocking device->host readbacks
+        self.decode_chunks = 0    # fused decode_many launches
+        self.prefill_calls = 0    # prefill program launches
+        self.prefill_shapes: Set[Tuple[int, int]] = set()  # (rows, S) seen
         self._tick = 0
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t, sharder),
+        self._decode_many = jax.jit(
+            partial(_decode_many, model, sharder, sampler, max_len,
+                    self.sync_every),
             donate_argnums=1)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, sharder, max_len=max_len))
@@ -101,10 +194,10 @@ class ServingEngine:
             prompt, truncated = prompt[:limit], True
         req = Request(next(self._uid), prompt, max_new_tokens, eos_id,
                       truncated=truncated, t_submit=self._tick)
-        # the `full` stop in step() cuts generation at max(2, max_len -
-        # len(prompt)) tokens (prefill token + decodes until the cache
-        # fills): flag requests whose max_new_tokens cannot fit instead of
-        # cutting the output silently
+        # the `full` stop in the decode loop cuts generation at max(2,
+        # max_len - len(prompt)) tokens (prefill token + decodes until the
+        # cache fills): flag requests whose max_new_tokens cannot fit
+        # instead of cutting the output silently
         cap = max(2, self.max_len - len(prompt))
         if max_new_tokens > cap:
             req.capped = True
@@ -119,102 +212,199 @@ class ServingEngine:
         """True while any request is queued or occupying a slot."""
         return bool(self.queue) or any(r is not None for r in self.slots)
 
-    def run(self, max_ticks: int = 10_000) -> None:
-        for _ in range(max_ticks):
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
             if not self.step():
                 break
 
+    # ------------------------------------------------------------- buckets
+    def bucket(self, n: int) -> int:
+        """Padded prefill length for an n-token prompt."""
+        if not self.bucketed_prefill:
+            return n
+        b = MIN_BUCKET
+        while b < n:
+            b *= 2
+        return min(b, self.max_len - 1)
+
+    @property
+    def bucket_lengths(self) -> List[int]:
+        """All bucket lengths this engine can emit (= its prefill compile
+        ceiling in bucketed mode)."""
+        limit = self.max_len - 1
+        out, b = [], MIN_BUCKET
+        while b < limit:
+            out.append(b)
+            b *= 2
+        out.append(limit)
+        return out
+
     # ----------------------------------------------------------------- ticks
-    def step(self) -> bool:
-        """One engine tick: admit pending requests, one batched decode.
-        Returns False when idle."""
+    def step(self, max_ticks: Optional[int] = None) -> bool:
+        """One host intervention: admit pending requests, then run up to
+        ``min(sync_every, max_ticks)`` fused decode ticks on device with a
+        single host sync at the end.  Returns False when idle."""
+        budget = self.sync_every if max_ticks is None \
+            else max(1, min(int(max_ticks), self.sync_every))
         n_instant = self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        if not active:
+        active_idx = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active_idx:
             if n_instant:
                 # prefill-only tick: every admit finished at its first
                 # token.  Real work happened, so time still advances.
-                self.util_history.append(min(1.0, n_instant / self.max_batch))
+                self.util_history.append(n_instant / self.max_batch)
                 self._tick += 1
                 return True
             return bool(self.queue)
-        tokens = jnp.asarray(self.next_token)
-        self.cache, logits = self._decode(self.params, self.cache, tokens)
-        self._key, sub = jax.random.split(self._key)
-        sampled = np.asarray(sample(logits, sub, self.sampler))
-        lengths = np.asarray(self.cache["lengths"])
-        for i in active:
-            req = self.slots[i]
-            tok = int(sampled[i])
-            req.output.append(tok)
-            self.total_tokens += 1
-            self.next_token[i] = tok
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            full = lengths[i] >= self.max_len - 1
-            if hit_eos or full or len(req.output) >= req.max_new_tokens:
-                self._finish(req)
-                self.slots[i] = None
-        self.util_history.append(
-            min(1.0, (len(active) + n_instant) / self.max_batch))
-        self._tick += 1
-        log.debug("tick %d: util=%.2f (%d+%d/%d slots) queued=%d "
-                  "completed=%d total_tokens=%d", self._tick,
-                  self.util_history[-1], len(active), n_instant,
-                  self.max_batch, len(self.queue), self.completed,
-                  self.total_tokens)
+        # if requests wait in the queue, break the chunk as soon as a slot
+        # frees so admission happens at the same tick the per-tick loop
+        # would have admitted at
+        stop_on_free = bool(self.queue)
+        n, self.cache, self._key, toks, acts, dones = self._decode_many(
+            self.params, self.cache, self.next_token, self._key,
+            self._active, self._eos, self._remaining,
+            np.int32(budget), np.bool_(stop_on_free))
+        self.decode_chunks += 1
+        # ---- the chunk's single blocking host<->device sync -------------
+        n, toks, acts, dones = jax.device_get((n, toks, acts, dones))
+        n = int(n)
+        self.host_syncs += 1
+        base = self._tick
+        for j in range(n):
+            n_active = 0
+            for i in active_idx:
+                req = self.slots[i]
+                if req is None or not acts[j, i]:
+                    continue
+                n_active += 1
+                req.output.append(int(toks[j, i]))
+                self.total_tokens += 1
+                if dones[j, i]:
+                    self._finish(req, base + j)
+                    self.slots[i] = None
+            self.util_history.append(
+                (n_active + (n_instant if j == 0 else 0)) / self.max_batch)
+        self._tick += n
+        # refresh the host mirrors from the authoritative slot table
+        self.next_token = toks[n - 1].copy()
+        self._active = np.array([r is not None for r in self.slots])
+        self._remaining = np.array(
+            [r.max_new_tokens - len(r.output) if r is not None else 0
+             for r in self.slots], np.int32)
+        log.debug("chunk of %d ticks -> tick %d: util=%.2f queued=%d "
+                  "completed=%d total_tokens=%d syncs=%d", n, self._tick,
+                  self.util_history[-1], len(self.queue), self.completed,
+                  self.total_tokens, self.host_syncs)
         return True
 
     # ------------------------------------------------------------- internals
-    def _finish(self, req: Request) -> None:
+    def _finish(self, req: Request, tick: int) -> None:
         req.done = True
-        req.t_done = self._tick
+        req.t_done = tick
         self.completed += 1
         self.finished.append(req)
 
+    def _pick(self, n: int) -> List[Request]:
+        """Pop up to n requests from the queue in admission order."""
+        n = min(n, len(self.queue))
+        if self.policy == "fcfs":
+            return [self.queue.popleft() for _ in range(n)]
+        # spf: shortest prompt first, FIFO among equal lengths
+        order = sorted(range(len(self.queue)),
+                       key=lambda j: (len(self.queue[j].prompt), j))[:n]
+        picked = [self.queue[j] for j in order]
+        for j in sorted(order, reverse=True):
+            del self.queue[j]
+        return picked
+
     def _admit(self) -> int:
-        """Admit queued requests into free slots; returns how many finished
-        at their prefill token (max_new_tokens=1 / instant EOS) — those
-        free their slot immediately, so the next queued request is retried
-        into the same slot within this tick."""
+        """Admit queued requests into free slots via bucketed batched
+        prefill; returns how many finished at their prefill token
+        (max_new_tokens=1 / instant EOS) — those never occupy a slot, so
+        further queued requests are retried in the same tick."""
         n_instant = 0
-        for i in range(self.max_batch):
-            while self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                # submit() guarantees 1 <= len(prompt) <= max_len - 1: the
-                # full prompt prefills (no silent tail loss) and at least
-                # one cache slot is left for generation.
-                prompt = req.prompt
-                batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
-                if self.model.cfg.m_rope_sections:
-                    S = len(prompt)
-                    batch["positions"] = jnp.broadcast_to(
-                        jnp.arange(S, dtype=jnp.int32), (1, 3, S))
-                cache1, logits1 = self._prefill(self.params, batch)
-                self._insert_slot(i, cache1)
-                self._key, sub = jax.random.split(self._key)
-                first = int(np.asarray(sample(logits1, sub, self.sampler))[0])
-                req.output.append(first)
-                self.total_tokens += 1
-                req.t_admit = req.t_first = self._tick
-                if ((req.eos_id is not None and first == req.eos_id)
-                        or len(req.output) >= req.max_new_tokens):
-                    # done at the prefill token: never occupies the slot
-                    # for a decode tick
-                    self._finish(req)
-                    n_instant += 1
-                    continue
-                self.next_token[i] = first
-                self.slots[i] = req
+        while self.queue:
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if not free:
+                break
+            picked = self._pick(len(free))
+            if self.bucketed_prefill:
+                groups: Dict[int, List[Request]] = {}
+                for req in picked:
+                    groups.setdefault(self.bucket(len(req.prompt)),
+                                      []).append(req)
+                grouped = sorted(groups.items())
+            else:
+                # legacy comparison path: one exact-length batch-1 prefill
+                # per request (compile count grows with distinct lengths)
+                grouped = [(len(r.prompt), [r]) for r in picked]
+            for S, reqs in grouped:
+                n_instant += self._prefill_group(S, reqs, free)
         return n_instant
 
-    def _insert_slot(self, slot: int, cache1) -> None:
-        """Scatter a batch-1 prefill cache into slot ``slot``."""
+    def _prefill_group(self, S: int, reqs: List[Request],
+                       free: List[int]) -> int:
+        """One padded batched prefill for same-bucket admissions: sample
+        every first token in one call, scatter all granted slots in one
+        pytree op.  Mutates ``free`` as slots are granted."""
+        rows = self.max_batch if self.bucketed_prefill else len(reqs)
+        tokens = np.zeros((rows, S), np.int32)
+        lengths = np.ones((rows,), np.int32)   # dummy rows: 1 valid token
+        for r_i, req in enumerate(reqs):
+            tokens[r_i, :len(req.prompt)] = req.prompt
+            lengths[r_i] = len(req.prompt)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths)}
+        if self.model.cfg.m_rope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (rows, 3, S))
+        cacheN, logitsN = self._prefill(self.params, batch)
+        self.prefill_calls += 1
+        self.prefill_shapes.add((rows, S))
+        self._key, first = split_and_sample(self._key, logitsN, self.sampler)
+        first = np.asarray(first)
+        self.host_syncs += 1
+        n_instant = 0
+        grant_rows: List[int] = []
+        grant_slots: List[int] = []
+        for r_i, req in enumerate(reqs):
+            tok = int(first[r_i])
+            req.output.append(tok)
+            self.total_tokens += 1
+            req.t_admit = req.t_first = self._tick
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.output) >= req.max_new_tokens):
+                # done at the prefill token: never occupies a slot
+                self._finish(req, self._tick)
+                n_instant += 1
+                self.instant_admits += 1
+                continue
+            slot = free.pop(0)
+            self.slots[slot] = req
+            self.next_token[slot] = tok
+            self._active[slot] = True
+            self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+            self._remaining[slot] = req.max_new_tokens - len(req.output)
+            grant_rows.append(r_i)
+            grant_slots.append(slot)
+        if grant_rows:
+            self._insert_slots(grant_slots, grant_rows, cacheN)
+        return n_instant
+
+    def _insert_slots(self, slots: List[int], rows: List[int],
+                      cacheN) -> None:
+        """Scatter prefill-cache rows ``rows`` into engine slots ``slots``
+        (one pytree op for the whole admitted group)."""
+        sl = jnp.asarray(slots, jnp.int32)
+        rw = jnp.asarray(rows, jnp.int32)
+
         def ins(big, small):
-            return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+            return big.at[:, sl].set(small[:, rw].astype(big.dtype))
+
         self.cache["blocks"] = jax.tree.map(ins, self.cache["blocks"],
-                                            cache1["blocks"])
-        self.cache["lengths"] = self.cache["lengths"].at[slot].set(
-            cache1["lengths"][0])
+                                            cacheN["blocks"])
+        self.cache["lengths"] = self.cache["lengths"].at[sl].set(
+            cacheN["lengths"][rw])
 
     # ------------------------------------------------------------- telemetry
     @property
@@ -224,13 +414,19 @@ class ServingEngine:
     def reset_telemetry(self) -> None:
         """Zero the counters/histories (e.g. after a jit warmup run, so
         wall-clock tick timings exclude compile).  The engine must be
-        drained; queued or in-flight requests would get skewed stamps."""
+        drained; queued or in-flight requests would get skewed stamps.
+        ``prefill_shapes`` survives: it mirrors the jit cache, which a
+        telemetry reset does not clear."""
         if self.has_work():
             raise RuntimeError("reset_telemetry() on a busy engine")
         self.completed = 0
         self.total_tokens = 0
         self.finished = []
         self.util_history = []
+        self.instant_admits = 0
+        self.host_syncs = 0
+        self.decode_chunks = 0
+        self.prefill_calls = 0
         self._tick = 0
 
     def stats(self) -> Dict[str, float]:
@@ -242,4 +438,9 @@ class ServingEngine:
             "total_tokens": self.total_tokens,
             "ticks": self._tick,
             "mean_util": sum(util) / len(util) if util else 0.0,
+            "instant_admits": self.instant_admits,
+            "host_syncs": self.host_syncs,
+            "decode_chunks": self.decode_chunks,
+            "prefill_calls": self.prefill_calls,
+            "prefill_compiles": len(self.prefill_shapes),
         }

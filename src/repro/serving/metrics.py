@@ -94,6 +94,25 @@ def aggregate(reqs: Sequence[Request], *, ticks: int,
     }
 
 
+def scale_latencies(agg: Dict[str, object],
+                    tick_seconds: float) -> Dict[str, object]:
+    """Map a tick-domain aggregate to milliseconds with a measured wall
+    cost per tick (e.g. from a warmed-up closed-loop calibration run).
+
+    This is the bridge between the deterministic virtual-clock trajectory
+    and real time: the tick-domain ``agg`` stays seed-exact, and this view
+    is derived, host-noisy, and reported separately (the benchmark files
+    keep it under their ``wall`` blocks)."""
+    out: Dict[str, object] = {"tick_seconds": tick_seconds}
+    for key in ("queue_wait", "ttft", "tpot"):
+        s = agg[key]
+        out[f"{key}_ms"] = {q: s[q] * tick_seconds * 1e3
+                            for q in ("p50", "p95", "p99", "mean")}
+    span_s = agg["ticks"] * tick_seconds
+    out["tokens_per_sec"] = agg["tokens"] / span_s if span_s > 0 else math.nan
+    return out
+
+
 def format_summary(agg: Dict[str, object]) -> str:
     """Human-readable one-block summary for the serve CLI."""
 

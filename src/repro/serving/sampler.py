@@ -17,7 +17,9 @@ class SamplerConfig:
 
 def sample(logits: jax.Array, key: jax.Array,
            cfg: SamplerConfig = SamplerConfig()) -> jax.Array:
-    """logits (B, V) -> tokens (B,) int32."""
+    """logits (B, V) -> tokens (B,) int32.  Pure and trace-safe: the same
+    function runs on host arrays and inside the engine's fused jitted
+    decode tick, so on-device sampling is host sampling by construction."""
     if cfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / cfg.temperature
@@ -25,3 +27,13 @@ def sample(logits: jax.Array, key: jax.Array,
         kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def split_and_sample(key: jax.Array, logits: jax.Array,
+                     cfg: SamplerConfig = SamplerConfig()):
+    """The serving engine's key convention: one split per sampling event,
+    sample with the subkey, carry the split key forward.  Returns
+    (new_key, tokens).  Shared by the host admission path and the fused
+    on-device decode tick so both provably consume the same key stream."""
+    key, sub = jax.random.split(key)
+    return key, sample(logits, sub, cfg)

@@ -208,10 +208,21 @@ class WallClock:
 
 
 def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
-          clock=None, max_ticks: int = 1_000_000) -> List[Request]:
+          clock=None, max_ticks: int = 1_000_000,
+          sync_every: Optional[int] = None) -> List[Request]:
     """Replay a workload against an engine: submit each item when the clock
-    reaches its arrival time, tick the engine until fully drained.  Returns
+    reaches its arrival time, run the engine until fully drained.  Returns
     the Request objects (all done) in arrival order.
+
+    Each ``engine.step()`` may run a multi-tick on-device chunk (the
+    engine's ``sync_every``); the clock advances once per *engine tick*,
+    and ``sync_every`` here caps the per-step tick budget on top of the
+    engine's own setting.  On a :class:`VirtualClock` the budget is also
+    bounded by the next pending arrival, so admission lands on exactly the
+    tick a per-tick loop would use — tick stamps are then independent of
+    ``sync_every`` (exact for the default ``tick_cost=1.0``).  On a
+    :class:`WallClock` arrivals can be admitted up to a chunk late; that
+    is the latency/throughput trade the knob exposes.
 
     Sets ``clock.busy_seconds`` to the wall time spent inside
     ``engine.step()`` (idle waits for arrivals excluded), so wall-clock
@@ -234,11 +245,19 @@ def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
         if not engine.has_work() and i >= len(pending):
             clock.busy_seconds = busy
             return reqs
+        budget = sync_every
+        if i < len(pending) and isinstance(clock, VirtualClock):
+            # never decode past the next arrival: ticks until it lands
+            gap = pending[i].t - clock.now
+            due = max(1, math.ceil(gap / clock.tick_cost)) if gap > 0 else 1
+            budget = due if budget is None else min(budget, due)
         t0 = time.perf_counter()
-        engine.step()
+        before = engine.ticks
+        engine.step(max_ticks=budget)
         busy += time.perf_counter() - t0
-        clock.tick()
-    raise RuntimeError(f"workload did not drain within {max_ticks} ticks "
+        for _ in range(engine.ticks - before):
+            clock.tick()
+    raise RuntimeError(f"workload did not drain within {max_ticks} steps "
                        f"({i}/{len(pending)} submitted)")
 
 
