@@ -2,11 +2,20 @@
 
 The paper's real-time scenario — asynchronous batch-of-1 arrivals — turned
 into a regression-trackable benchmark: for every cell of
-``repro.configs.SERVING_LOAD_SWEEP`` (dense / MoE / RWKV architecture x
-``max_batch`` x arrival rate) it replays a seeded Poisson workload through
-the continuous-batching engine on a virtual clock and aggregates
+``repro.configs.SERVING_LOAD_SWEEP`` it replays a seeded Poisson workload
+through the continuous-batching engine on a virtual clock and aggregates
 per-request latency percentiles (queue-wait, TTFT, TPOT) plus tokens/sec
-and mean slot utilization.
+and mean slot utilization.  The grid has three sections:
+
+* the base grid — dense / MoE / RWKV architecture x ``max_batch`` x
+  arrival rate, unchanged since the harness landed (its cell names and
+  ``metrics`` blocks are the stable perf-trajectory history);
+* a prompt-length-distribution sweep (fixed / lognormal / bimodal) over
+  the saturating RWKV cell;
+* the *overload scenario*: the same seeded over-capacity workload with a
+  3% heavy-decode tail and per-request deadlines, served under FCFS, EDF,
+  and preemptive EDF — new cells whose ``slo`` / ``sched`` blocks track
+  what scheduling policy buys (see repro.serving.scheduler).
 
   PYTHONPATH=src python -m benchmarks.serving_load [--full] [--seed N] \\
       [--out BENCH_serving.json]
@@ -70,14 +79,25 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
              reduced: bool = True, max_len: int = 64,
              _built=None) -> Dict[str, object]:
     """One sweep cell: build (or reuse) the model, replay the workload on a
-    virtual clock, return {identity, metrics, wall}."""
+    virtual clock, return {identity, metrics, wall}.
+
+    Cells with non-default scheduling dimensions (policy / preempt /
+    deadline_slack / prompt_dist) additionally report a deterministic
+    ``sched`` block (policy identity + engine preemption counters);
+    default-grid cells emit the exact historical document shape."""
     cfg, model, params = _built or _build(cell.arch, reduced)
     sharder = make_sharder(cfg, None, "decode")
     engine = ServingEngine(model, params, sharder, max_batch=cell.max_batch,
-                           max_len=max_len, seed=seed)
+                           max_len=max_len, seed=seed, policy=cell.policy,
+                           preempt=cell.preempt)
+    duration = cell.duration if cell.duration is not None else duration
     items = make_workload("poisson", rate=cell.rate, duration=duration,
                           seed=seed, vocab_size=cfg.vocab_size,
-                          prompt_len=(4, 12), max_new_tokens=(6, 10))
+                          prompt_len=(4, 12), max_new_tokens=(6, 10),
+                          prompt_dist=cell.prompt_dist,
+                          prompt_len_long=max_len - 1,
+                          heavy_decode=cell.heavy_decode,
+                          deadline_slack=cell.deadline_slack)
     t0 = time.perf_counter()
     reqs = drive(engine, items)
     wall_s = time.perf_counter() - t0
@@ -86,7 +106,7 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
     # wall-calibrated tick cost (engine is warm after the drive), mapping
     # the deterministic tick-domain latencies above to milliseconds
     tick_s = _calibrate_tick_seconds(engine, cfg.vocab_size, seed)
-    return {
+    out = {
         "name": cell.name,
         "arch": cell.arch,
         "family": cell.family,
@@ -100,6 +120,24 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
             "calibrated": smetrics.scale_latencies(agg, tick_s),
         },
     }
+    default_sched = (cell.policy == "fcfs" and not cell.preempt
+                     and cell.prompt_dist == "uniform"
+                     and cell.heavy_decode is None
+                     and cell.deadline_slack is None)
+    if not default_sched:
+        s = engine.stats()
+        out["sched"] = {  # deterministic, like metrics
+            "policy": cell.policy,
+            "preempt": cell.preempt,
+            "prompt_dist": cell.prompt_dist,
+            "heavy_decode": list(cell.heavy_decode)
+            if cell.heavy_decode else None,
+            "deadline_slack": cell.deadline_slack,
+            "preemptions": int(s["preemptions"]),
+            "resumes": int(s["resumes"]),
+            "evicted_tokens": int(s["evicted_tokens"]),
+        }
+    return out
 
 
 def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
@@ -142,24 +180,59 @@ def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
         f.write("\n")
 
 
+def _check_policy_registry() -> None:
+    """Fail loudly if the scheduler registry and the serve CLI's --policy
+    choices drift apart (the smoke runs in tier-1 CI, so a policy added to
+    one surface but not the other breaks the build, not production)."""
+    from repro.launch.serve import build_parser
+    from repro.serving.scheduler import SCHEDULERS
+
+    choices = None
+    for action in build_parser()._actions:
+        if "--policy" in action.option_strings:
+            choices = set(action.choices or ())
+    if choices is None:
+        raise RuntimeError("launch/serve.py no longer exposes --policy")
+    if choices != set(SCHEDULERS):
+        raise RuntimeError(
+            f"--policy CLI choices {sorted(choices)} drifted from the "
+            f"scheduler registry {sorted(SCHEDULERS)}; update "
+            f"launch/serve.py or repro/serving/scheduler.py")
+    swept = {(c.policy, c.preempt) for c in SERVING_LOAD_SWEEP}
+    missing = set(SCHEDULERS) - {p for p, _ in swept}
+    if missing - {"spf"}:   # spf is covered by decode_hotpath's tests
+        raise RuntimeError(f"policies {sorted(missing)} are registered but "
+                           f"never exercised by SERVING_LOAD_SWEEP")
+
+
 def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
     """benchmarks.run harness entry: emit one CSV row per cell and refresh
-    BENCH_serving.json in the working directory.  ``smoke`` runs a single
-    tiny cell and does NOT touch BENCH_serving.json — it only proves the
-    script still runs (the tier-1 CI guard)."""
+    BENCH_serving.json in the working directory.  ``smoke`` runs one tiny
+    base cell plus the overload scenario (every policy in it, preemption
+    included) and does NOT touch BENCH_serving.json — it proves the
+    scripts and the scheduler registry still work (the tier-1 CI guard)."""
     if smoke:
-        cells = [c for c in SERVING_LOAD_SWEEP
-                 if c.family == "rwkv" and c.max_batch == 2][-1:]
-        if not cells:   # keep the CI guard loud if the sweep is reshaped
+        import dataclasses
+
+        _check_policy_registry()
+        base = [c for c in SERVING_LOAD_SWEEP
+                if c.family == "rwkv" and c.max_batch == 2
+                and c.policy == "fcfs" and c.prompt_dist == "uniform"
+                and c.heavy_decode is None and c.deadline_slack is None][-1:]
+        overload = [dataclasses.replace(c, duration=8.0)
+                    for c in SERVING_LOAD_SWEEP
+                    if c.deadline_slack is not None]
+        if not base or not overload:  # keep the CI guard loud on reshapes
             raise RuntimeError("smoke filter matched no SERVING_LOAD_SWEEP "
                                "cell; update the filter")
-        doc = sweep(fast=True, cells=cells, duration=8.0)
+        doc = sweep(fast=True, cells=base + overload, duration=8.0)
     else:
         doc = sweep(fast=fast)
         write(doc)
     for c in doc["cells"]:
         m, w = c["metrics"], c["wall"]
         us_per_tok = w["seconds"] / m["tokens"] * 1e6 if m["tokens"] else 0.0
+        slo = (f" slo={m['slo']['attainment']:.2f}" if "slo" in m else "")
         yield Row(
             f"serving_load/{c['name']}",
             us_per_tok,
@@ -167,7 +240,7 @@ def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
             f" tpot_p99={m['tpot']['p99']:.2f}t"
             f" qwait_p99={m['queue_wait']['p99']:.0f}t"
             f" tok_per_tick={m['tokens_per_sec']:.2f}"
-            f" util={m['mean_util']:.2f}")
+            f" util={m['mean_util']:.2f}" + slo)
 
 
 def main() -> None:
@@ -186,11 +259,12 @@ def main() -> None:
           f"families={doc['families']}")
     for c in doc["cells"]:
         m = c["metrics"]
-        print(f"  {c['name']:>30}"
-              f" ttft p50/p99 = {m['ttft']['p50']:5.1f}/{m['ttft']['p99']:5.1f}t"
+        slo = (f"  slo {m['slo']['attainment']:.2f}" if "slo" in m else "")
+        print(f"  {c['name']:>36}"
+              f" ttft p50/p95 = {m['ttft']['p50']:5.1f}/{m['ttft']['p95']:5.1f}t"
               f"  tpot p50/p99 = {m['tpot']['p50']:4.2f}/{m['tpot']['p99']:4.2f}t"
               f"  {m['tokens_per_sec']:5.2f} tok/tick"
-              f"  util {m['mean_util']:.2f}")
+              f"  util {m['mean_util']:.2f}" + slo)
 
 
 if __name__ == "__main__":

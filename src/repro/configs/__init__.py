@@ -14,7 +14,7 @@ RNN cell is not an LM architecture and lives outside the LM shape grid.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 from repro.configs.base import (
     ModelConfig,
@@ -121,16 +121,39 @@ class ServingLoadCell:
     """One cell of the serving-load benchmark (benchmarks/serving_load.py):
     an architecture served at ``max_batch`` slots under Poisson arrivals at
     ``rate`` requests per clock unit.  ``family`` tags the model class so
-    the benchmark provably spans dense / MoE / RWKV."""
+    the benchmark provably spans dense / MoE / RWKV.
+
+    The scheduling dimensions (``policy`` / ``preempt`` /
+    ``deadline_slack``) and the prompt-length distribution default to the
+    original grid's values, and :attr:`name` only appends suffixes for
+    non-default settings — so every pre-existing cell keeps its exact
+    historical name (and, on the virtual clock, its exact ``metrics``
+    block) while the overload / prompt-distribution cells appear as new
+    rows in ``BENCH_serving.json``."""
 
     arch: str
     family: str          # "dense" | "moe" | "rwkv"
     max_batch: int
     rate: float
+    policy: str = "fcfs"             # scheduler registry key
+    preempt: bool = False            # EDF evict-to-host preemption
+    prompt_dist: str = "uniform"     # workload.PROMPT_DISTS
+    # (frac, lo, hi): seeded frac of requests decode lo..hi tokens — the
+    # long-tail service-time mixture (slot occupancy = decode ticks)
+    heavy_decode: Optional[Tuple[float, int, int]] = None
+    deadline_slack: Optional[float] = None   # decode-proportional SLO
+    duration: Optional[float] = None         # override the sweep default
 
     @property
     def name(self) -> str:
-        return f"{self.arch}/b{self.max_batch}/r{self.rate:g}"
+        n = f"{self.arch}/b{self.max_batch}/r{self.rate:g}"
+        if self.prompt_dist != "uniform":
+            n += f"/{self.prompt_dist}"
+        if self.heavy_decode is not None:
+            n += "/heavy"
+        if self.policy != "fcfs" or self.preempt:
+            n += f"/{self.policy}" + ("+p" if self.preempt else "")
+        return n
 
 
 # One under-loaded and one saturating rate per (arch, max_batch): the
@@ -138,11 +161,41 @@ class ServingLoadCell:
 # rate 0.1 offers ~1.6 tok/unit — under even max_batch=2's 2-tokens/tick
 # ceiling (empty-queue regime) — while rate 1.0 offers ~16, past
 # max_batch=4's ceiling (queue-growth regime).
-SERVING_LOAD_SWEEP: Tuple[ServingLoadCell, ...] = tuple(
+_SERVING_BASE_GRID: Tuple[ServingLoadCell, ...] = tuple(
     ServingLoadCell(arch, family, mb, rate)
     for arch, family in (("qwen2.5-14b", "dense"),
                          ("qwen3-moe-30b-a3b", "moe"),
                          ("rwkv6-1.6b", "rwkv"))
     for mb in (2, 4)
     for rate in (0.1, 1.0)
+)
+
+# Prompt-length-distribution sweep (ROADMAP "Next"): the saturating RWKV
+# cell re-served under fixed / lognormal / bimodal prompt lengths.
+_SERVING_PROMPT_DIST_GRID: Tuple[ServingLoadCell, ...] = tuple(
+    ServingLoadCell("rwkv6-1.6b", "rwkv", 4, 1.0, prompt_dist=dist)
+    for dist in ("fixed", "lognormal", "bimodal")
+)
+
+# Overload scenario: offered slot-ticks exceed capacity (rate 0.8 x mean
+# ~9.3 decode ticks vs 4 slots ~ 1.9x overload) and 3% of requests are
+# heavy-decode jobs that hog a slot for 32-48 ticks — the long-tail
+# service mixture where scheduling policy decides the latency tail.
+# Every request carries the decode-proportional deadline
+# arrival + 3 * max_new ticks.  The same seeded workload runs under
+# FCFS, EDF, and preemptive EDF, so the cells isolate exactly what the
+# policy buys: EDF stops tight-deadline shorts from queueing behind
+# heavies (p95 TTFT drops vs FCFS), and +preempt additionally evicts a
+# running heavy to host the moment a tighter deadline arrives.
+OVERLOAD_DEADLINE_SLACK = 3.0
+OVERLOAD_HEAVY_DECODE = (0.03, 32, 48)
+_SERVING_OVERLOAD_GRID: Tuple[ServingLoadCell, ...] = tuple(
+    ServingLoadCell("rwkv6-1.6b", "rwkv", 4, 0.8, policy=policy,
+                    preempt=preempt, heavy_decode=OVERLOAD_HEAVY_DECODE,
+                    deadline_slack=OVERLOAD_DEADLINE_SLACK, duration=128.0)
+    for policy, preempt in (("fcfs", False), ("edf", False), ("edf", True))
+)
+
+SERVING_LOAD_SWEEP: Tuple[ServingLoadCell, ...] = (
+    _SERVING_BASE_GRID + _SERVING_PROMPT_DIST_GRID + _SERVING_OVERLOAD_GRID
 )

@@ -9,11 +9,24 @@ batching engine, optionally under an open-loop arrival process.
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
       --arrival poisson --rate 0.5 --duration 64 --seed 0
 
+  # deadline-driven overload: EDF admission with preemption, SLO report
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
+      --arrival poisson --rate 2.0 --duration 64 --prompt-dist bimodal \\
+      --policy edf --preempt --deadline-slack 3.0
+
 ``--arrival {poisson,mmpp,trace}`` replays a workload from
 ``repro.serving.workload`` and prints the TTFT/TPOT/queue-wait percentile
 summary.  ``--clock virtual`` (default) is deterministic — the metrics are
 a pure function of (workload, seed); ``--clock wall`` paces arrivals in
 real time and additionally reports measured wall tokens/sec.
+
+``--policy`` choices are generated from the scheduler registry
+(``repro.serving.scheduler.SCHEDULERS``) so the CLI can never offer a
+policy the engine does not implement; the benchmark smoke guard asserts
+this stays true.  ``--deadline-slack S`` stamps every generated request
+with the absolute deadline ``arrival + S * max_new`` clock units — the
+decode-proportional SLO EDF orders by — and ``--deadline-frac`` leaves a
+random fraction of traffic best-effort.
 """
 
 from __future__ import annotations
@@ -32,10 +45,13 @@ from repro.serving import ServingEngine
 from repro.serving import metrics as smetrics
 from repro.serving import workload as wl
 from repro.serving.sampler import SamplerConfig
+from repro.serving.scheduler import POLICIES
 from repro.testing import reduced_config
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, as a factory so tools (and the benchmark smoke
+    guard) can introspect it without running a model."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -50,12 +66,24 @@ def main() -> None:
                     help="decode ticks per host sync: the fused on-device "
                          "decode loop runs this many ticks between host "
                          "interventions (admission/retire)")
-    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"),
-                    help="admission order: FCFS or shortest-prompt-first")
+    ap.add_argument("--policy", default="fcfs", choices=POLICIES,
+                    help="admission order: FCFS, shortest-prompt-first, or "
+                         "earliest-deadline-first (choices come from the "
+                         "scheduler registry)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="allow the scheduler to evict a running request "
+                         "to host memory when a strictly tighter deadline "
+                         "waits (EDF only); evicted requests resume "
+                         "bit-exactly once a slot frees")
     ap.add_argument("--no-bucketed-prefill", action="store_true",
                     help="legacy exact-length batch-1 prefill per request "
                          "(compiles per distinct prompt length) instead of "
                          "length-bucketed batched prefill")
+    ap.add_argument("--no-overlap-prefill", action="store_true",
+                    help="serialize admission with decode: block on the "
+                         "prefill sample readback before launching the "
+                         "decode chunk (the pre-overlap engine behaviour; "
+                         "the schedule is identical either way)")
     # open-loop arrival process (the paper's asynchronous-serving scenario)
     ap.add_argument("--arrival", default="batch",
                     choices=("batch",) + wl.ARRIVAL_KINDS,
@@ -65,9 +93,24 @@ def main() -> None:
                     help="arrival rate, requests per clock unit")
     ap.add_argument("--duration", type=float, default=64.0,
                     help="workload span in clock units")
+    ap.add_argument("--prompt-dist", default="uniform",
+                    choices=wl.PROMPT_DISTS,
+                    help="prompt-length distribution for generated "
+                         "workloads (bimodal = long-tail prompts, the "
+                         "regime where preemption pays)")
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    help="stamp generated requests with the absolute "
+                         "deadline arrival + SLACK * max_new clock units "
+                         "(decode-proportional: slot occupancy is decode "
+                         "length on the virtual clock); enables the SLO "
+                         "block and gives EDF something to order by")
+    ap.add_argument("--deadline-frac", type=float, default=1.0,
+                    help="fraction of generated requests carrying a "
+                         "deadline (rest are best-effort)")
     ap.add_argument("--trace-file", default=None,
                     help="JSONL trace for --arrival trace (see "
-                         "repro.serving.workload.save_trace)")
+                         "repro.serving.workload.save_trace; traces carry "
+                         "their own optional per-request deadlines)")
     ap.add_argument("--clock", default="virtual",
                     choices=("virtual", "wall"),
                     help="virtual: deterministic tick clock; wall: pace "
@@ -78,7 +121,11 @@ def main() -> None:
                          "replaying traces recorded on a larger engine)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="DEBUG logging: per-tick engine utilization lines")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
@@ -95,7 +142,9 @@ def main() -> None:
                            seed=args.seed,
                            truncate_prompts=args.truncate_prompts,
                            sync_every=args.sync_every, policy=args.policy,
-                           bucketed_prefill=not args.no_bucketed_prefill)
+                           preempt=args.preempt,
+                           bucketed_prefill=not args.no_bucketed_prefill,
+                           overlap_prefill=not args.no_overlap_prefill)
 
     if args.arrival == "batch":
         rng = np.random.default_rng(args.seed)
@@ -119,7 +168,8 @@ def main() -> None:
     items = wl.make_workload(
         args.arrival, rate=args.rate, duration=args.duration, seed=args.seed,
         vocab_size=cfg.vocab_size, max_new_tokens=(args.max_new, args.max_new),
-        trace_path=args.trace_file)
+        prompt_dist=args.prompt_dist, deadline_slack=args.deadline_slack,
+        deadline_frac=args.deadline_frac, trace_path=args.trace_file)
     # declared span for generated workloads; a trace only knows its arrivals
     span = None if args.arrival == "trace" else args.duration
     shown = span if span is not None else max((it.t for it in items),
@@ -154,6 +204,10 @@ def main() -> None:
           f"{s['prefill_calls']} prefill calls over "
           f"{s['prefill_compiles']} compiled shapes, "
           f"{s['instant_admits']} instant admits")
+    if s["preemptions"]:
+        print(f"scheduler: {s['preemptions']} preemptions / "
+              f"{s['resumes']} resumes, {s['evicted_tokens']} tokens "
+              f"evicted to host")
     if args.clock == "wall":
         print(f"wall: {dt:.2f}s, {agg['tokens'] / dt:.1f} tok/s measured")
 

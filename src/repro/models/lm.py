@@ -230,6 +230,20 @@ class LM:
         return pspec.tree_init(self.cache_specs(batch, max_len),
                                jax.random.PRNGKey(0))
 
+    def cache_batch_axes(self, cache) -> Dict[str, Any]:
+        """Batch(=slot)-axis index for every cache leaf — the cache pytree
+        contract the serving layer's slot-state manager keys on.
+
+        Every leaf under ``blocks`` is period-stacked (axis 0 = scan
+        period), so its slot axis is 1; the top-level ``lengths`` vector
+        carries slots on axis 0.  Gathering a slot's column across this
+        axes tree captures the request's *entire* decode state — KV ring
+        (k/v/pos and int8 scales), rwkv wkv/shift, ssd/conv, cross-attn
+        keys, and its length counter — which is what makes preempt-to-
+        host / resume (repro.serving.slotstate) architecture-agnostic."""
+        return {"blocks": jax.tree.map(lambda _: 1, cache["blocks"]),
+                "lengths": 0}
+
     # ---------------------------------------------------------------- prefill
     def prefill(self, params, batch, sharder: Sharder, max_len: int = 0):
         """Full-sequence prefill.  Returns (cache, last_token_logits).

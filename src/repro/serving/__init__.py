@@ -4,6 +4,21 @@ from repro.serving.metrics import (  # noqa: F401
     format_summary,
     scale_latencies,
 )
+from repro.serving.scheduler import (  # noqa: F401
+    EDF,
+    FCFS,
+    POLICIES,
+    SCHEDULERS,
+    SPF,
+    Scheduler,
+    make_scheduler,
+)
+from repro.serving.slotstate import (  # noqa: F401
+    SlotManager,
+    SlotSnapshot,
+    gather_slots,
+    scatter_slots,
+)
 from repro.serving.workload import (  # noqa: F401
     VirtualClock,
     WallClock,

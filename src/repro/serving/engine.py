@@ -5,6 +5,19 @@ join by prefilling into a free slot and leave on EOS/length without
 disturbing the others — the standard continuous-batching scheme
 (Orca/vLLM) on a fixed-slot KV cache.
 
+The engine is mechanism only; the serving stack is three explicit layers:
+
+* :mod:`repro.serving.scheduler` owns *policy* — which queued request to
+  admit (FCFS / SPF / EDF) and, for preemptive EDF, which running request
+  to evict when a tighter deadline arrives;
+* :mod:`repro.serving.slotstate` owns *state* — the cache pytree and the
+  per-slot control mirrors, with a symmetric gather/scatter API so a
+  slot's whole decode state can be evicted to host and later restored
+  bit-exactly into any free slot (preempt → resume);
+* this module owns *execution* — ``step()`` asks the scheduler, moves
+  state through the slot manager, runs the prefill / fused-decode
+  programs, and reports telemetry.
+
 The steady-state hot path is the paper's thesis applied at the host level:
 breaking the serving loop into per-kernel launches (decode, then a host
 round-trip to sample, then a host read of the lengths) wastes the machine
@@ -22,8 +35,18 @@ same-bucket admissions prefill in one fixed-batch call, so the number of
 prefill XLA compiles is bounded by the bucket count instead of the number
 of distinct prompt lengths, and bursty (MMPP) arrival spikes amortize
 into one program launch.  Slot insertion is one pytree scatter for the
-whole admitted group.  ``policy="spf"`` admits shortest-prompt-first
-(stable within a length) instead of FCFS.
+whole admitted group.
+
+With ``overlap_prefill=True`` (default) admission no longer serializes
+with decode: the prefill program, the on-device first-token sample, the
+slot scatter, and the decode chunk are all dispatched back-to-back with
+no host sync in between, and the first tokens ride home on the chunk's
+single readback.  The schedule (tick stamps, outputs, utilization) is
+bit-identical to the synchronous path; only the blocking-readback count
+drops.  Admission rounds that can finish at the prefill token (a request
+with an ``eos_id``, or ``max_new_tokens == 1``) fall back to the
+synchronous path, because instant retirement frees the slot for further
+same-tick admissions and that decision needs the sampled token on host.
 
 Virtual-clock semantics are unchanged: with the default ``sync_every=1``
 (and for any ``sync_every`` under ``workload.drive``'s arrival-bounded
@@ -36,7 +59,6 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import logging
-from collections import deque
 from functools import partial
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -47,10 +69,11 @@ import numpy as np
 from repro.dist.sharding import Sharder
 from repro.models.lm import LM
 from repro.serving.sampler import SamplerConfig, split_and_sample
+from repro.serving.scheduler import POLICIES, Scheduler, make_scheduler
+from repro.serving.slotstate import SlotManager, SlotSnapshot
 
 log = logging.getLogger("repro.serving")
 
-POLICIES = ("fcfs", "spf")
 MIN_BUCKET = 8   # smallest prefill length bucket (pow2 upward, cap max_len-1)
 
 
@@ -60,6 +83,7 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    deadline: Optional[float] = None   # absolute, clock units (EDF + SLO)
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -71,6 +95,23 @@ class Request:
     t_admit: Optional[int] = None   # tick the prefill ran (slot granted)
     t_first: Optional[int] = None   # tick the first token was produced
     t_done: Optional[int] = None    # tick the request completed
+    # preemption lifecycle (EDF --preempt): evict-to-host / resume stamps
+    n_preempts: int = 0
+    t_preempts: List[int] = dataclasses.field(default_factory=list)
+    t_resumes: List[int] = dataclasses.field(default_factory=list)
+    saved: Optional[SlotSnapshot] = dataclasses.field(
+        default=None, repr=False)   # host state while evicted
+
+
+@dataclasses.dataclass
+class _PendingAdmit:
+    """An overlapped admission group: first tokens still on device, host
+    bookkeeping deferred to the decode chunk's readback."""
+
+    reqs: List[Request]
+    rows: List[int]
+    slots: List[int]
+    first: jax.Array            # (rows,) sampled prefill tokens, on device
 
 
 def _decode_many(model: LM, sharder: Sharder, sampler: SamplerConfig,
@@ -129,9 +170,9 @@ class ServingEngine:
                  max_batch: int = 4, max_len: int = 128,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
                  truncate_prompts: bool = False, sync_every: int = 1,
-                 policy: str = "fcfs", bucketed_prefill: bool = True):
-        if policy not in POLICIES:
-            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+                 policy: str = "fcfs", preempt: bool = False,
+                 bucketed_prefill: bool = True,
+                 overlap_prefill: bool = True):
         if sync_every < 1:
             raise ValueError(f"sync_every must be >= 1, got {sync_every}")
         self.model = model
@@ -143,15 +184,10 @@ class ServingEngine:
         self.truncate_prompts = truncate_prompts
         self.sync_every = int(sync_every)
         self.policy = policy
+        self.scheduler: Scheduler = make_scheduler(policy, preempt=preempt)
         self.bucketed_prefill = bucketed_prefill
-        self.cache = model.init_cache(max_batch, max_len)
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: deque[Request] = deque()
-        # host mirrors of the per-slot device control vectors
-        self.next_token = np.zeros((max_batch,), np.int32)
-        self._active = np.zeros((max_batch,), bool)
-        self._eos = np.full((max_batch,), -1, np.int32)
-        self._remaining = np.zeros((max_batch,), np.int32)
+        self.overlap_prefill = overlap_prefill
+        self.sm = SlotManager(model, max_batch, max_len)
         self.completed = 0        # requests finished since construction
         self.total_tokens = 0     # tokens generated (prefill + decode)
         self.finished: List[Request] = []   # completed Requests, in order
@@ -161,6 +197,10 @@ class ServingEngine:
         self.decode_chunks = 0    # fused decode_many launches
         self.prefill_calls = 0    # prefill program launches
         self.prefill_shapes: Set[Tuple[int, int]] = set()  # (rows, S) seen
+        self.preemptions = 0      # slots evicted to host
+        self.resumes = 0          # evicted requests restored to a slot
+        self.evicted_tokens = 0   # tokens already generated at eviction
+        self._pending: List[_PendingAdmit] = []  # overlapped admissions
         self._tick = 0
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
@@ -171,9 +211,23 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, sharder, max_len=max_len))
 
+    # ------------------------------------------------- back-compat accessors
+    @property
+    def cache(self):
+        return self.sm.cache
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return self.sm.slots
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
     # ------------------------------------------------------------------ API
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               deadline: Optional[float] = None) -> Request:
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt")
@@ -193,7 +247,8 @@ class ServingEngine:
                         "(max_len=%d)", len(prompt), limit, self.max_len)
             prompt, truncated = prompt[:limit], True
         req = Request(next(self._uid), prompt, max_new_tokens, eos_id,
-                      truncated=truncated, t_submit=self._tick)
+                      deadline=deadline, truncated=truncated,
+                      t_submit=self._tick)
         # the `full` stop in the decode loop cuts generation at max(2,
         # max_len - len(prompt)) tokens (prefill token + decodes until the
         # cache fills): flag requests whose max_new_tokens cannot fit
@@ -205,12 +260,12 @@ class ServingEngine:
                         "for a %d-token prompt (max_len=%d); output stops "
                         "at %d tokens", req.uid, max_new_tokens,
                         len(prompt), self.max_len, cap)
-        self.queue.append(req)
+        self.scheduler.submit(req)
         return req
 
     def has_work(self) -> bool:
         """True while any request is queued or occupying a slot."""
-        return bool(self.queue) or any(r is not None for r in self.slots)
+        return bool(len(self.scheduler)) or self.sm.n_active() > 0
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -241,13 +296,14 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- ticks
     def step(self, max_ticks: Optional[int] = None) -> bool:
-        """One host intervention: admit pending requests, then run up to
-        ``min(sync_every, max_ticks)`` fused decode ticks on device with a
-        single host sync at the end.  Returns False when idle."""
+        """One host intervention: ask the scheduler (preempt + admit), run
+        up to ``min(sync_every, max_ticks)`` fused decode ticks on device
+        with a single host sync at the end, report telemetry.  Returns
+        False when idle."""
         budget = self.sync_every if max_ticks is None \
             else max(1, min(int(max_ticks), self.sync_every))
-        n_instant = self._admit()
-        active_idx = [i for i, r in enumerate(self.slots) if r is not None]
+        n_instant = self._schedule()
+        active_idx = self.sm.occupied()
         if not active_idx:
             if n_instant:
                 # prefill-only tick: every admit finished at its first
@@ -255,25 +311,33 @@ class ServingEngine:
                 self.util_history.append(n_instant / self.max_batch)
                 self._tick += 1
                 return True
-            return bool(self.queue)
+            return bool(len(self.scheduler))
         # if requests wait in the queue, break the chunk as soon as a slot
         # frees so admission happens at the same tick the per-tick loop
         # would have admitted at
-        stop_on_free = bool(self.queue)
-        n, self.cache, self._key, toks, acts, dones = self._decode_many(
-            self.params, self.cache, self.next_token, self._key,
-            self._active, self._eos, self._remaining,
+        stop_on_free = bool(len(self.scheduler))
+        tokens_in = self._merge_pending_tokens()
+        n, self.sm.cache, self._key, toks, acts, dones = self._decode_many(
+            self.params, self.sm.cache, tokens_in, self._key,
+            self.sm.active, self.sm.eos, self.sm.remaining,
             np.int32(budget), np.bool_(stop_on_free))
         self.decode_chunks += 1
         # ---- the chunk's single blocking host<->device sync -------------
-        n, toks, acts, dones = jax.device_get((n, toks, acts, dones))
+        # (overlapped admissions' first tokens ride home on the same pull)
+        n, toks, acts, dones, firsts = jax.device_get(
+            (n, toks, acts, dones, [p.first for p in self._pending]))
         n = int(n)
         self.host_syncs += 1
+        for p, fv in zip(self._pending, firsts):
+            for req, row in zip(p.reqs, p.rows):
+                req.output.append(int(fv[row]))
+                self.total_tokens += 1
+        self._pending = []
         base = self._tick
         for j in range(n):
             n_active = 0
             for i in active_idx:
-                req = self.slots[i]
+                req = self.sm.slots[i]
                 if req is None or not acts[j, i]:
                     continue
                 n_active += 1
@@ -281,19 +345,15 @@ class ServingEngine:
                 self.total_tokens += 1
                 if dones[j, i]:
                     self._finish(req, base + j)
-                    self.slots[i] = None
+                    self.sm.release(i)
             self.util_history.append(
                 (n_active + (n_instant if j == 0 else 0)) / self.max_batch)
         self._tick += n
         # refresh the host mirrors from the authoritative slot table
-        self.next_token = toks[n - 1].copy()
-        self._active = np.array([r is not None for r in self.slots])
-        self._remaining = np.array(
-            [r.max_new_tokens - len(r.output) if r is not None else 0
-             for r in self.slots], np.int32)
+        self.sm.refresh_after_chunk(toks[n - 1])
         log.debug("chunk of %d ticks -> tick %d: util=%.2f queued=%d "
                   "completed=%d total_tokens=%d syncs=%d", n, self._tick,
-                  self.util_history[-1], len(self.queue), self.completed,
+                  self.util_history[-1], len(self.scheduler), self.completed,
                   self.total_tokens, self.host_syncs)
         return True
 
@@ -304,49 +364,110 @@ class ServingEngine:
         self.completed += 1
         self.finished.append(req)
 
-    def _pick(self, n: int) -> List[Request]:
-        """Pop up to n requests from the queue in admission order."""
-        n = min(n, len(self.queue))
-        if self.policy == "fcfs":
-            return [self.queue.popleft() for _ in range(n)]
-        # spf: shortest prompt first, FIFO among equal lengths
-        order = sorted(range(len(self.queue)),
-                       key=lambda j: (len(self.queue[j].prompt), j))[:n]
-        picked = [self.queue[j] for j in order]
-        for j in sorted(order, reverse=True):
-            del self.queue[j]
-        return picked
+    def _merge_pending_tokens(self):
+        """Decode-chunk input tokens: the host mirror, with overlapped
+        admissions' first tokens merged in on device (they were sampled by
+        the prefill program and never came to host)."""
+        if not self._pending:
+            return self.sm.next_token
+        tokens = jnp.asarray(self.sm.next_token)
+        for p in self._pending:
+            tokens = tokens.at[jnp.asarray(p.slots, jnp.int32)].set(
+                p.first[jnp.asarray(p.rows, jnp.int32)])
+        return tokens
+
+    # ----------------------------------------------------------- scheduling
+    def preempt(self, slot: int) -> Request:
+        """Evict the request in ``slot`` to host memory and requeue it.
+
+        One blocking ``device_get`` gathers the slot's full cache column
+        (see SlotManager.snapshot); once the scheduler grants it a slot
+        again the request resumes bit-exactly under greedy decoding (with
+        stochastic sampling the engine-global key stream makes resumed
+        tokens slot/tick-dependent — see slotstate's module docstring).
+        Called automatically by preemptive policies (EDF ``--preempt``);
+        public for manual load shedding and the round-trip tests."""
+        req = self.sm.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty")
+        req.saved = self.sm.snapshot(slot)
+        self.host_syncs += 1
+        req.n_preempts += 1
+        req.t_preempts.append(self._tick)
+        self.preemptions += 1
+        self.evicted_tokens += len(req.output)
+        self.sm.release(slot)
+        self.scheduler.requeue_front(req)
+        log.debug("preempted req %d from slot %d at tick %d "
+                  "(%d tokens evicted to host)", req.uid, slot, self._tick,
+                  len(req.output))
+        return req
+
+    def _schedule(self) -> int:
+        """One scheduler consultation: preempt (if the policy does), then
+        admit queued requests into free slots.  Returns how many admits
+        finished at their prefill token."""
+        if self.scheduler.preemptive and len(self.scheduler):
+            for slot in self.scheduler.victims(self.sm.running(),
+                                               len(self.sm.free())):
+                self.preempt(slot)
+        return self._admit()
 
     def _admit(self) -> int:
-        """Admit queued requests into free slots via bucketed batched
-        prefill; returns how many finished at their prefill token
-        (max_new_tokens=1 / instant EOS) — those never occupy a slot, so
-        further queued requests are retried in the same tick."""
+        """Admit queued requests into free slots — evicted requests are
+        restored from their host snapshots (no model call), fresh ones go
+        through bucketed batched prefill.  Returns how many finished at
+        their prefill token (max_new_tokens=1 / instant EOS) — those never
+        occupy a slot, so further queued requests are retried in the same
+        tick."""
         n_instant = 0
-        while self.queue:
-            free = [i for i, r in enumerate(self.slots) if r is None]
+        while len(self.scheduler):
+            free = self.sm.free()
             if not free:
                 break
-            picked = self._pick(len(free))
+            picked = self.scheduler.pick(len(free))
+            resumes = [r for r in picked if r.saved is not None]
+            fresh = [r for r in picked if r.saved is None]
+            for req in resumes:
+                slot = free.pop(0)
+                self.sm.restore(slot, req.saved, req)
+                req.saved = None
+                req.t_resumes.append(self._tick)
+                self.resumes += 1
+                log.debug("resumed req %d into slot %d at tick %d",
+                          req.uid, slot, self._tick)
+            if not fresh:
+                continue
             if self.bucketed_prefill:
                 groups: Dict[int, List[Request]] = {}
-                for req in picked:
+                for req in fresh:
                     groups.setdefault(self.bucket(len(req.prompt)),
                                       []).append(req)
                 grouped = sorted(groups.items())
             else:
                 # legacy comparison path: one exact-length batch-1 prefill
                 # per request (compile count grows with distinct lengths)
-                grouped = [(len(r.prompt), [r]) for r in picked]
+                grouped = [(len(r.prompt), [r]) for r in fresh]
+            # instant retirement (EOS at the prefill token / one-token
+            # budget) frees the slot for further same-tick admissions, and
+            # that decision needs the sampled token on host: such rounds
+            # take the synchronous path
+            overlap = (self.overlap_prefill
+                       and not any(r.eos_id is not None
+                                   or r.max_new_tokens == 1 for r in fresh))
             for S, reqs in grouped:
-                n_instant += self._prefill_group(S, reqs, free)
+                n_instant += self._prefill_group(S, reqs, free, overlap)
         return n_instant
 
     def _prefill_group(self, S: int, reqs: List[Request],
-                       free: List[int]) -> int:
+                       free: List[int], overlap: bool) -> int:
         """One padded batched prefill for same-bucket admissions: sample
         every first token in one call, scatter all granted slots in one
-        pytree op.  Mutates ``free`` as slots are granted."""
+        pytree op.  Mutates ``free`` as slots are granted.
+
+        ``overlap=True`` keeps the sampled first tokens on device and
+        defers the host bookkeeping to the decode chunk's readback, so
+        the prefill never blocks the chunk launch."""
         rows = self.max_batch if self.bucketed_prefill else len(reqs)
         tokens = np.zeros((rows, S), np.int32)
         lengths = np.ones((rows,), np.int32)   # dummy rows: 1 valid token
@@ -362,11 +483,22 @@ class ServingEngine:
         self.prefill_calls += 1
         self.prefill_shapes.add((rows, S))
         self._key, first = split_and_sample(self._key, logitsN, self.sampler)
+        if overlap:
+            grant_rows, grant_slots = [], []
+            for r_i, req in enumerate(reqs):
+                slot = free.pop(0)
+                self.sm.grant(slot, req, None)
+                req.t_admit = req.t_first = self._tick
+                grant_rows.append(r_i)
+                grant_slots.append(slot)
+            self.sm.insert_from_prefill(grant_slots, grant_rows, cacheN)
+            self._pending.append(_PendingAdmit(list(reqs), grant_rows,
+                                               grant_slots, first))
+            return 0
         first = np.asarray(first)
         self.host_syncs += 1
         n_instant = 0
-        grant_rows: List[int] = []
-        grant_slots: List[int] = []
+        grant_rows, grant_slots = [], []
         for r_i, req in enumerate(reqs):
             tok = int(first[r_i])
             req.output.append(tok)
@@ -380,31 +512,12 @@ class ServingEngine:
                 self.instant_admits += 1
                 continue
             slot = free.pop(0)
-            self.slots[slot] = req
-            self.next_token[slot] = tok
-            self._active[slot] = True
-            self._eos[slot] = -1 if req.eos_id is None else req.eos_id
-            self._remaining[slot] = req.max_new_tokens - len(req.output)
+            self.sm.grant(slot, req, tok)
             grant_rows.append(r_i)
             grant_slots.append(slot)
         if grant_rows:
-            self._insert_slots(grant_slots, grant_rows, cacheN)
+            self.sm.insert_from_prefill(grant_slots, grant_rows, cacheN)
         return n_instant
-
-    def _insert_slots(self, slots: List[int], rows: List[int],
-                      cacheN) -> None:
-        """Scatter prefill-cache rows ``rows`` into engine slots ``slots``
-        (one pytree op for the whole admitted group)."""
-        sl = jnp.asarray(slots, jnp.int32)
-        rw = jnp.asarray(rows, jnp.int32)
-
-        def ins(big, small):
-            return big.at[:, sl].set(small[:, rw].astype(big.dtype))
-
-        self.cache["blocks"] = jax.tree.map(ins, self.cache["blocks"],
-                                            cacheN["blocks"])
-        self.cache["lengths"] = self.cache["lengths"].at[sl].set(
-            cacheN["lengths"][rw])
 
     # ------------------------------------------------------------- telemetry
     @property
@@ -427,13 +540,16 @@ class ServingEngine:
         self.host_syncs = 0
         self.decode_chunks = 0
         self.prefill_calls = 0
+        self.preemptions = 0
+        self.resumes = 0
+        self.evicted_tokens = 0
         self._tick = 0
 
     def stats(self) -> Dict[str, float]:
         util = self.util_history
         return {
-            "active": sum(r is not None for r in self.slots),
-            "queued": len(self.queue),
+            "active": self.sm.n_active(),
+            "queued": len(self.scheduler),
             "completed": self.completed,
             "total_tokens": self.total_tokens,
             "ticks": self._tick,
@@ -443,4 +559,11 @@ class ServingEngine:
             "decode_chunks": self.decode_chunks,
             "prefill_calls": self.prefill_calls,
             "prefill_compiles": len(self.prefill_shapes),
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "evicted_tokens": self.evicted_tokens,
         }
+
+
+# re-exported for back-compat: the policy registry lives in scheduler.py
+__all__ = ["Request", "ServingEngine", "POLICIES", "MIN_BUCKET"]

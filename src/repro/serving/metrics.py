@@ -11,7 +11,20 @@ paper's real-time scenario is judged on:
   admitted on its submission tick has TTFT 1, not 0;
 * **TPOT** — time per output token over the decode phase (first token
   excluded, so a one-token request has no TPOT sample);
-* **tokens/sec** and mean utilization over the active span.
+* **tokens/sec** and mean utilization over the active span;
+* **SLO attainment** — for requests carrying a ``deadline`` (absolute
+  clock units): the fraction whose completion tick ended by the deadline
+  (``(t_done + 1) * tick_seconds <= deadline``, consistent with TTFT
+  counting the prefill tick as 1; on the virtual clock one tick is one
+  clock unit and the scaling is a no-op);
+* **preemption counters** — evictions, resumes, and how many requests
+  were ever preempted (EDF ``--preempt``).
+
+The ``slo`` block appears only when some request carries a deadline, and
+the ``preemption`` block only when some request was actually preempted —
+so aggregates of deadline-less FCFS/SPF runs are byte-identical to what
+this module produced before either feature existed, which is what keeps
+the committed ``BENCH_serving.json`` history comparable.
 
 Everything is computed in ticks and scaled by ``tick_seconds`` at the end,
 so the same aggregation serves both the deterministic virtual-clock mode
@@ -23,7 +36,7 @@ nearest-rank method: exact, deterministic, no interpolation.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 from repro.serving.engine import Request
 
@@ -80,7 +93,7 @@ def aggregate(reqs: Sequence[Request], *, ticks: int,
 
     span = ticks * tick_seconds
     util = list(util_history)
-    return {
+    out: Dict[str, object] = {
         "completed": len(per),
         "submitted": len(reqs),
         "tokens": tokens,
@@ -92,6 +105,30 @@ def aggregate(reqs: Sequence[Request], *, ticks: int,
         "tokens_per_sec": tokens / span if span > 0 else math.nan,
         "mean_util": (float(sum(util) / len(util)) if util else math.nan),
     }
+    # deadline / preemption blocks: emitted only when the feature was in
+    # play, so deadline-less runs aggregate to the historical dict exactly.
+    # Deadlines are absolute *clock* units, so the tick-domain completion
+    # is scaled by tick_seconds before the comparison (a no-op on the
+    # virtual clock, where one tick is one clock unit).
+    with_dl = [r for r in reqs if r.deadline is not None]
+    if with_dl:
+        met = sum(1 for r in with_dl
+                  if r.done and r.t_done is not None
+                  and (r.t_done + 1) * tick_seconds <= r.deadline)
+        out["slo"] = {
+            "n": len(with_dl),
+            "met": met,
+            "violations": len(with_dl) - met,
+            "attainment": met / len(with_dl),
+        }
+    n_preempts = sum(r.n_preempts for r in reqs)
+    if n_preempts:
+        out["preemption"] = {
+            "preemptions": n_preempts,
+            "resumes": sum(len(r.t_resumes) for r in reqs),
+            "preempted_requests": sum(1 for r in reqs if r.n_preempts),
+        }
+    return out
 
 
 def scale_latencies(agg: Dict[str, object],
@@ -121,10 +158,21 @@ def format_summary(agg: Dict[str, object]) -> str:
         return (f"  {name:<10} p50={s['p50']:8.3f}  p95={s['p95']:8.3f}  "
                 f"p99={s['p99']:8.3f}  mean={s['mean']:8.3f}  (n={s['n']})")
 
-    return "\n".join([
+    lines = [
         f"completed {agg['completed']}/{agg['submitted']} requests, "
         f"{agg['tokens']} tokens in {agg['ticks']} ticks "
         f"({agg['tokens_per_sec']:.2f} tok/s, "
         f"mean util {agg['mean_util']:.2f})",
         line("queue_wait"), line("ttft"), line("tpot"),
-    ])
+    ]
+    if "slo" in agg:
+        s = agg["slo"]
+        lines.append(f"  slo        {s['met']}/{s['n']} met "
+                     f"({s['attainment']:.1%} attainment, "
+                     f"{s['violations']} violations)")
+    if "preemption" in agg:
+        p = agg["preemption"]
+        lines.append(f"  preempt    {p['preemptions']} evictions / "
+                     f"{p['resumes']} resumes over "
+                     f"{p['preempted_requests']} requests")
+    return "\n".join(lines)

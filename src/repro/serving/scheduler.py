@@ -1,0 +1,205 @@
+"""Request schedulers: all admission/preemption *policy* in one place.
+
+The paper's core claim is that serving RNNs well is a scheduling problem
+— cross-kernel optimization over general loop constructs, not a pile of
+BLAS calls — and "Measuring scheduling efficiency of RNNs for NLP
+applications" shows the scheduling policy dominates RNN serving
+efficiency.  The :class:`~repro.serving.engine.ServingEngine` therefore
+keeps *mechanism* (prefill, the fused decode chunk, slot state) and
+delegates every "who runs next" decision to a :class:`Scheduler`:
+
+* which queued requests to admit when slots free (:meth:`Scheduler.pick`);
+* which running requests to *preempt* to make room for more urgent
+  arrivals (:meth:`Scheduler.victims`) — only :class:`EDF` preempts.
+
+Policies
+--------
+``fcfs``
+    First-come-first-served: admit in arrival order.  The baseline, and
+    the order every virtual-clock trajectory in ``BENCH_serving.json``
+    was recorded under — its schedules are bit-identical to the
+    pre-refactor engine.
+``spf``
+    Shortest-prompt-first: admit the cheapest prefill first (FIFO among
+    equal lengths).  Approximates shortest-job-first on the prefill cost.
+``edf``
+    Earliest-deadline-first over the optional per-request ``deadline``
+    (clock units; see :mod:`repro.serving.workload`).  Requests without a
+    deadline sort last (infinite deadline) and fall back to FIFO among
+    themselves.  With ``preempt=True`` it is *preemptive*: when no slot
+    is free and a queued request's deadline is strictly earlier than a
+    running request's, the latest-deadline running request is evicted to
+    host memory (see :mod:`repro.serving.slotstate`) and resumed —
+    bit-exactly — once a slot frees.  Preemption pays under overload
+    with long-tail prompts: a long, slack request no longer blocks a
+    burst of tight-deadline arrivals for its whole decode.
+
+The queue lives *in* the scheduler (the engine never touches ordering);
+all state is host-side and deterministic, so a policy is a pure function
+of the submission/completion sequence.  ``SCHEDULERS`` is the single
+registry: the engine validates against it and the ``--policy`` CLI
+choices are generated from it, so the two cannot drift (enforced by the
+benchmark smoke guard).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import TYPE_CHECKING, Dict, List, Sequence, Tuple, Type
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle (engine imports us)
+    from repro.serving.engine import Request
+
+
+def _deadline(req: "Request") -> float:
+    """EDF sort key: an absent deadline is infinitely late."""
+    return math.inf if req.deadline is None else float(req.deadline)
+
+
+class Scheduler:
+    """Base policy: owns the pending queue, decides admission order.
+
+    Subclasses override :meth:`pick` (and :meth:`victims` if preemptive).
+    ``pick(n)`` must *remove* the returned requests from the queue; a
+    request that could not be admitted after all (no capacity left in the
+    same engine tick) is handed back via :meth:`requeue_front`.
+    """
+
+    name: str = "base"
+    preemptive: bool = False
+
+    def __init__(self) -> None:
+        self.queue: deque = deque()
+
+    # ------------------------------------------------------------- queue ops
+    def submit(self, req: "Request") -> None:
+        """Enqueue a new request."""
+        self.queue.append(req)
+
+    def requeue_front(self, req: "Request") -> None:
+        """Hand back a request the engine could not place this tick (or a
+        just-evicted victim): it keeps its original submission order
+        (``uid``, assigned monotonically at submit) and goes to the queue
+        front so FIFO-style policies retry it first."""
+        self.queue.appendleft(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    # --------------------------------------------------------------- policy
+    def pick(self, n: int) -> List["Request"]:
+        """Remove and return up to ``n`` requests to admit, in order."""
+        raise NotImplementedError
+
+    def victims(self, running: Sequence[Tuple[int, "Request"]],
+                n_free: int) -> List[int]:
+        """Slots to evict so more urgent queued requests can run.
+
+        ``running`` is ``[(slot, request), ...]``; ``n_free`` is how many
+        slots are already free.  Non-preemptive policies never evict."""
+        return []
+
+    def _pop_indices(self, order: Sequence[int]) -> List["Request"]:
+        picked = [self.queue[j] for j in order]
+        for j in sorted(order, reverse=True):
+            del self.queue[j]
+        return picked
+
+
+class FCFS(Scheduler):
+    """First-come-first-served (arrival order)."""
+
+    name = "fcfs"
+
+    def pick(self, n: int) -> List["Request"]:
+        n = min(n, len(self.queue))
+        return [self.queue.popleft() for _ in range(n)]
+
+
+class SPF(Scheduler):
+    """Shortest-prompt-first (FIFO among equal prompt lengths)."""
+
+    name = "spf"
+
+    def pick(self, n: int) -> List["Request"]:
+        n = min(n, len(self.queue))
+        order = sorted(range(len(self.queue)),
+                       key=lambda j: (len(self.queue[j].prompt), j))[:n]
+        return self._pop_indices(order)
+
+
+class EDF(Scheduler):
+    """Earliest-deadline-first; optionally preemptive.
+
+    Admission: queued requests sorted by (deadline, submission order) —
+    deadline-less requests run last, FIFO among themselves.  Preemption
+    (``preempt=True``): pairs the most urgent waiters against the
+    latest-deadline runners and evicts a runner only when the waiter's
+    deadline is *strictly* earlier — equal deadlines never thrash, and a
+    deadline-less waiter never preempts anything.
+    """
+
+    name = "edf"
+
+    def __init__(self, preempt: bool = False) -> None:
+        super().__init__()
+        self.preemptive = bool(preempt)
+
+    def _key(self, req: "Request") -> Tuple[float, int]:
+        # uid is assigned monotonically at engine.submit, so it IS the
+        # submission order — an evicted request keeps its original rank
+        return (_deadline(req), req.uid)
+
+    def pick(self, n: int) -> List["Request"]:
+        n = min(n, len(self.queue))
+        order = sorted(range(len(self.queue)),
+                       key=lambda j: self._key(self.queue[j]))[:n]
+        return self._pop_indices(order)
+
+    def victims(self, running: Sequence[Tuple[int, "Request"]],
+                n_free: int) -> List[int]:
+        if not self.preemptive or not self.queue:
+            return []
+        waiting = sorted(self.queue, key=self._key)
+        runners = sorted(running, key=lambda sr: self._key(sr[1]),
+                         reverse=True)          # latest deadline first
+        out: List[int] = []
+        for w in waiting:
+            if n_free > 0:        # a slot is free anyway: no eviction needed
+                n_free -= 1
+                continue
+            if not runners:
+                break
+            slot, victim = runners[0]
+            if _deadline(w) < _deadline(victim):
+                out.append(slot)
+                runners.pop(0)
+            else:                 # waiters only get less urgent from here
+                break
+        return out
+
+
+SCHEDULERS: Dict[str, Type[Scheduler]] = {
+    FCFS.name: FCFS,
+    SPF.name: SPF,
+    EDF.name: EDF,
+}
+
+POLICIES: Tuple[str, ...] = tuple(SCHEDULERS)
+
+
+def make_scheduler(policy: str, *, preempt: bool = False) -> Scheduler:
+    """Instantiate a registered policy.  ``preempt`` is only meaningful
+    for preemption-capable policies (EDF); requesting it elsewhere is an
+    error rather than a silent no-op."""
+    cls = SCHEDULERS.get(policy)
+    if cls is None:
+        raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+    if cls is EDF:
+        return EDF(preempt=preempt)
+    if preempt:
+        raise ValueError(f"policy {policy!r} is non-preemptive; "
+                         f"preempt=True requires one of: "
+                         f"{[n for n, c in SCHEDULERS.items() if c is EDF]}")
+    return cls()

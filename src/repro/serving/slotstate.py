@@ -1,0 +1,183 @@
+"""Unified slot-state manager: the serving cache as an addressable store.
+
+The engine's serving state is a cache pytree (stacked-period KV rings,
+rwkv ``wkv``/shift states, ssd/conv states, per-slot ``lengths``) plus
+host-side per-slot control vectors (next token, active mask, EOS id,
+remaining budget).  Pre-refactor this knowledge was smeared through
+``ServingEngine`` and only flowed one way (prefill rows scattered *into*
+slots).  :class:`SlotManager` centralizes it behind a symmetric
+gather/scatter API keyed on the batch-axis contract that
+:meth:`repro.models.lm.LM.cache_batch_axes` declares for every cache
+leaf — no layer-kind special cases, so any architecture the LM wrapper
+serves is preemptable for free.
+
+The symmetric half is what enables preemption: :meth:`snapshot` gathers
+one slot's full device state into a host :class:`SlotSnapshot` (a single
+``device_get``), and :meth:`restore` scatters it back into *any* free
+slot later.  The round trip is bit-exact — device→host→device copies
+preserve every dtype's bits, KV ring positions are absolute (slot-
+independent), and recurrent states carry no slot identity — so under
+greedy decoding an evicted request resumes the exact token trajectory it
+would have produced uninterrupted, wherever and whenever it lands
+(property-tested across rwkv/dense/hymba in ``tests/test_preemption.py``).
+Stochastic sampling consumes one engine-global PRNG key per batch tick,
+so there the guarantee is schedule-relative: the trajectory is unchanged
+iff the request decodes in the same slot on the same ticks (e.g. an
+evict + next-step resume into the same slot is a provable no-op; a
+delayed or cross-slot resume re-rolls the randomness, which is sampling
+noise, not state corruption).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+
+def _index(a, ax: int, idx):
+    ix = [slice(None)] * a.ndim
+    ix[ax] = idx
+    return tuple(ix)
+
+
+def gather_slots(cache, axes, slots: Sequence[int]):
+    """Gather the given slot columns out of every cache leaf (device op).
+
+    ``axes`` is the leaf→batch-axis pytree from ``LM.cache_batch_axes``;
+    the result keeps a slot axis of size ``len(slots)`` in every leaf, so
+    it scatters back with :func:`scatter_slots` unchanged."""
+    idx = jnp.asarray(list(slots), jnp.int32)
+    return jax.tree.map(lambda a, ax: jnp.take(a, idx, axis=ax),
+                        cache, axes)
+
+
+def scatter_slots(cache, axes, slots: Sequence[int], sub):
+    """Scatter slot columns (one per entry of ``slots``) into the cache —
+    the inverse of :func:`gather_slots`; one pytree op for the group."""
+    idx = jnp.asarray(list(slots), jnp.int32)
+    return jax.tree.map(
+        lambda a, s, ax: a.at[_index(a, ax, idx)].set(
+            jnp.asarray(s).astype(a.dtype)),
+        cache, sub, axes)
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """One slot's complete decode state, on host.
+
+    ``cache_col`` is the host copy of every cache leaf's slot column
+    (slot axis kept, size 1); ``next_token`` is the last sampled token —
+    the decode input the slot would have consumed next.  Together with
+    the request's own host state (``output``, ``max_new_tokens``,
+    ``eos_id``) this is everything needed to resume bit-exactly."""
+
+    cache_col: Any
+    next_token: int
+
+    def nbytes(self) -> int:
+        return int(sum(np.asarray(leaf).nbytes
+                       for leaf in jax.tree.leaves(self.cache_col)))
+
+
+class SlotManager:
+    """Owns the decode-slot state: cache pytree + host control mirrors.
+
+    The engine asks it *where* things go (free/occupied slots), moves
+    state through it (prefill insertion, snapshot/restore, post-chunk
+    refresh), and never touches the cache layout directly.  Policy — who
+    gets a slot — stays in :mod:`repro.serving.scheduler`."""
+
+    def __init__(self, model: LM, max_batch: int, max_len: int):
+        self.max_batch = max_batch
+        self.cache = model.init_cache(max_batch, max_len)
+        self.axes = model.cache_batch_axes(self.cache)
+        self.slots: List[Optional[object]] = [None] * max_batch
+        # host mirrors of the per-slot device control vectors
+        self.next_token = np.zeros((max_batch,), np.int32)
+        self.active = np.zeros((max_batch,), bool)
+        self.eos = np.full((max_batch,), -1, np.int32)
+        self.remaining = np.zeros((max_batch,), np.int32)
+
+    # ------------------------------------------------------------ occupancy
+    def free(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def occupied(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def running(self) -> List[Tuple[int, object]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    # ------------------------------------------------------------- grant/free
+    def grant(self, slot: int, req, next_token: Optional[int]) -> None:
+        """Mark a slot occupied by ``req``.  ``next_token`` may be None
+        when the first token is still on device (overlapped admission);
+        the post-chunk refresh fills the host mirror."""
+        self.slots[slot] = req
+        self.active[slot] = True
+        self.eos[slot] = -1 if req.eos_id is None else req.eos_id
+        self.remaining[slot] = req.max_new_tokens - len(req.output) - (
+            1 if next_token is None else 0)
+        if next_token is not None:
+            self.next_token[slot] = next_token
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.active[slot] = False
+
+    # ------------------------------------------------------- prefill insert
+    def insert_from_prefill(self, slots: Sequence[int], rows: Sequence[int],
+                            cacheN) -> None:
+        """Scatter prefill-cache rows into engine slots (one pytree op for
+        the whole admitted group): the write half of the gather/scatter
+        pair, with the prefill batch rows as the source columns."""
+        sl = jnp.asarray(list(slots), jnp.int32)
+        rw = jnp.asarray(list(rows), jnp.int32)
+        self.cache = jax.tree.map(
+            lambda big, small, ax: big.at[_index(big, ax, sl)].set(
+                jnp.take(small, rw, axis=ax).astype(big.dtype)),
+            self.cache, cacheN, self.axes)
+
+    # ------------------------------------------------------ preempt / resume
+    def snapshot(self, slot: int) -> SlotSnapshot:
+        """Gather one slot's device state to host (one blocking
+        ``device_get``) — the evict-to-host half of preemption."""
+        col = jax.device_get(gather_slots(self.cache, self.axes, [slot]))
+        return SlotSnapshot(cache_col=col,
+                            next_token=int(self.next_token[slot]))
+
+    def restore(self, slot: int, snap: SlotSnapshot, req) -> None:
+        """Scatter a snapshot into a (not necessarily the same) free slot
+        and re-arm the control mirrors — the resume half.  No model call,
+        no sampler-key consumption: the request decodes its next tick as
+        if it had never left."""
+        self.cache = scatter_slots(self.cache, self.axes, [slot],
+                                   snap.cache_col)
+        self.slots[slot] = req
+        self.active[slot] = True
+        self.eos[slot] = -1 if req.eos_id is None else req.eos_id
+        self.remaining[slot] = req.max_new_tokens - len(req.output)
+        self.next_token[slot] = snap.next_token
+
+    # ------------------------------------------------------ post-chunk sync
+    def refresh_after_chunk(self, last_tokens: np.ndarray) -> None:
+        """Re-derive the host mirrors from the authoritative slot table
+        after a decode chunk's readback."""
+        self.next_token = last_tokens.copy()
+        self.active = np.array([r is not None for r in self.slots])
+        self.remaining = np.array(
+            [r.max_new_tokens - len(r.output) if r is not None else 0
+             for r in self.slots], np.int32)
+
+    def stats(self) -> Dict[str, int]:
+        return {"active": self.n_active(),
+                "free": self.max_batch - self.n_active()}

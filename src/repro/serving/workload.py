@@ -39,24 +39,37 @@ ARRIVAL_KINDS = ("poisson", "mmpp", "trace")
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadItem:
-    """One request in an arrival schedule (times in clock units)."""
+    """One request in an arrival schedule (times in clock units).
+
+    ``deadline`` is an optional *absolute* completion deadline in the same
+    clock units as ``t`` (so slack = deadline - t).  It feeds the EDF
+    scheduler and the SLO-attainment metric; absent means no deadline —
+    the request sorts last under EDF and contributes no SLO sample.  The
+    JSONL trace schema mirrors this: the ``deadline`` field is optional
+    and traces written before it existed load unchanged.
+    """
 
     t: float
     prompt: Tuple[int, ...]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    deadline: Optional[float] = None
 
     def to_json(self) -> dict:
         d = {"t": self.t, "prompt": list(self.prompt),
              "max_new_tokens": self.max_new_tokens}
         if self.eos_id is not None:
             d["eos_id"] = self.eos_id
+        if self.deadline is not None:
+            d["deadline"] = self.deadline
         return d
 
     @staticmethod
     def from_json(d: dict) -> "WorkloadItem":
+        dl = d.get("deadline")
         return WorkloadItem(float(d["t"]), tuple(int(x) for x in d["prompt"]),
-                            int(d.get("max_new_tokens", 16)), d.get("eos_id"))
+                            int(d.get("max_new_tokens", 16)), d.get("eos_id"),
+                            None if dl is None else float(dl))
 
 
 # ---------------------------------------------------------------------------
@@ -103,17 +116,79 @@ def mmpp_arrivals(rates: Tuple[float, float], dwell: Tuple[float, float],
     return times
 
 
+PROMPT_DISTS = ("uniform", "fixed", "lognormal", "bimodal")
+
+# bimodal long-mode weight: a long-TAIL mixture, rare enough that p95
+# latencies reflect the short mode (the requests a deadline scheduler can
+# actually help) while the occasional giant prompt still clogs slots
+BIMODAL_LONG_FRAC = 0.08
+
+
+def _prompt_length(rng: np.random.Generator, dist: str,
+                   lo: int, hi: int, long_hi: int) -> int:
+    """One prompt length draw under the named distribution.
+
+    ``uniform`` draws exactly as the pre-distribution code did (same rng
+    call sequence, so seeded default workloads are unchanged).  ``fixed``
+    is the range midpoint every time.  ``lognormal`` has its median at
+    the midpoint with a long right tail clipped to ``long_hi``.
+    ``bimodal`` mixes the short uniform range with a long mode on
+    ``[3*hi, long_hi]`` at ``BIMODAL_LONG_FRAC`` weight — the
+    long-tail-prompt regime where preemptive scheduling pays."""
+    if dist == "uniform":
+        return int(rng.integers(lo, hi + 1))
+    if dist == "fixed":
+        return (lo + hi) // 2
+    if dist == "lognormal":
+        x = rng.lognormal(mean=math.log((lo + hi) / 2.0), sigma=0.6)
+        return int(min(max(int(round(x)), lo), long_hi))
+    if dist == "bimodal":
+        if rng.uniform() >= BIMODAL_LONG_FRAC:
+            return int(rng.integers(lo, hi + 1))
+        return int(rng.integers(min(3 * hi, long_hi), long_hi + 1))
+    raise ValueError(f"unknown prompt_dist {dist!r}; known: {PROMPT_DISTS}")
+
+
 def synthesize(times: Sequence[float], rng: np.random.Generator, *,
                vocab_size: int, prompt_len: Tuple[int, int] = (4, 12),
                max_new_tokens: Tuple[int, int] = (8, 16),
-               eos_id: Optional[int] = None) -> List[WorkloadItem]:
-    """Attach seeded random prompts/lengths to a list of arrival times."""
+               eos_id: Optional[int] = None,
+               prompt_dist: str = "uniform",
+               prompt_len_long: Optional[int] = None,
+               heavy_decode: Optional[Tuple[float, int, int]] = None,
+               deadline_slack: Optional[float] = None,
+               deadline_frac: float = 1.0) -> List[WorkloadItem]:
+    """Attach seeded random prompts/lengths to a list of arrival times.
+
+    ``prompt_dist`` selects the prompt-length distribution (see
+    :func:`_prompt_length`); ``prompt_len_long`` caps the long tail
+    (default ``4 * prompt_len[1]``).  ``heavy_decode=(frac, lo, hi)``
+    turns a seeded ``frac`` of requests into heavy-decode jobs with
+    ``max_new_tokens`` drawn from ``[lo, hi]`` — on the virtual clock a
+    request's slot-occupancy *is* its decode length, so this is the
+    long-tail *service-time* mixture (the overload regime where
+    preempting a slot-hogging job pays).  ``deadline_slack``, when set,
+    stamps each request with the decode-proportional absolute deadline
+    ``t + deadline_slack * max_new_tokens`` (finish within ``slack``
+    times your own decode length — the SLO-scale convention, in the same
+    tick units the engine serves in).  ``deadline_frac`` < 1 leaves a
+    seeded random fraction of requests deadline-less (best-effort
+    traffic mixed into the SLO stream)."""
+    long_hi = prompt_len_long if prompt_len_long is not None \
+        else 4 * prompt_len[1]
     items = []
     for t in times:
-        n = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        n = _prompt_length(rng, prompt_dist, prompt_len[0], prompt_len[1],
+                           long_hi)
         m = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
+        if heavy_decode is not None and rng.uniform() < heavy_decode[0]:
+            m = int(rng.integers(heavy_decode[1], heavy_decode[2] + 1))
         prompt = tuple(int(x) for x in rng.integers(0, vocab_size, size=n))
-        items.append(WorkloadItem(float(t), prompt, m, eos_id))
+        deadline = None
+        if deadline_slack is not None:
+            if deadline_frac >= 1.0 or rng.uniform() < deadline_frac:
+                deadline = float(t) + deadline_slack * m
+        items.append(WorkloadItem(float(t), prompt, m, eos_id, deadline))
     return items
 
 
@@ -123,12 +198,22 @@ def make_workload(kind: str, *, rate: float, duration: float, seed: int,
                   max_new_tokens: Tuple[int, int] = (8, 16),
                   burst_factor: float = 4.0,
                   dwell: Tuple[float, float] = (16.0, 4.0),
+                  prompt_dist: str = "uniform",
+                  prompt_len_long: Optional[int] = None,
+                  heavy_decode: Optional[Tuple[float, int, int]] = None,
+                  deadline_slack: Optional[float] = None,
+                  deadline_frac: float = 1.0,
                   trace_path: Optional[str] = None) -> List[WorkloadItem]:
     """One-stop workload builder for the CLI and the benchmark.
 
     ``kind``: "poisson" | "mmpp" | "trace".  For "mmpp" the quiet rate is
     ``rate`` and the burst rate is ``rate * burst_factor``.  The result is
-    a pure function of the arguments (seeded ``numpy`` generator).
+    a pure function of the arguments (seeded ``numpy`` generator); with
+    the default ``prompt_dist``/deadline arguments the draw sequence is
+    exactly the pre-deadline one, so historical seeds replay unchanged.
+    ``prompt_dist`` / ``deadline_slack`` / ``deadline_frac`` are forwarded
+    to :func:`synthesize` (deadlines stamp an absolute, service-
+    proportional SLO per request; traces carry their own deadlines).
     """
     if kind == "trace":
         if not trace_path:
@@ -144,7 +229,11 @@ def make_workload(kind: str, *, rate: float, duration: float, seed: int,
         raise ValueError(f"unknown arrival kind {kind!r}; "
                          f"known: {ARRIVAL_KINDS}")
     return synthesize(times, rng, vocab_size=vocab_size,
-                      prompt_len=prompt_len, max_new_tokens=max_new_tokens)
+                      prompt_len=prompt_len, max_new_tokens=max_new_tokens,
+                      prompt_dist=prompt_dist, prompt_len_long=prompt_len_long,
+                      heavy_decode=heavy_decode,
+                      deadline_slack=deadline_slack,
+                      deadline_frac=deadline_frac)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +329,7 @@ def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
         while i < len(pending) and pending[i].t <= clock.now:
             it = pending[i]
             reqs.append(engine.submit(list(it.prompt), it.max_new_tokens,
-                                      it.eos_id))
+                                      it.eos_id, deadline=it.deadline))
             i += 1
         if not engine.has_work() and i >= len(pending):
             clock.busy_seconds = busy

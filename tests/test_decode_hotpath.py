@@ -224,6 +224,47 @@ def test_prefill_recompile_bound(setup):
     assert legacy.stats()["prefill_compiles"] == len(set(lengths))
 
 
+def test_overlap_prefill_schedule_identical_fewer_syncs(setup):
+    """Overlapped admission (prefill + first-token sample + slot scatter +
+    decode chunk dispatched with no host sync in between) produces the
+    bit-identical schedule of the synchronous path — same tokens, stamps,
+    util — while performing strictly fewer blocking readbacks."""
+    cfg = setup[0]
+
+    def serve(overlap):
+        eng = _engine(setup, max_batch=4, seed=3, overlap_prefill=overlap,
+                      sampler=SamplerConfig(temperature=0.9, top_k=6))
+        items = make_workload("poisson", rate=0.9, duration=24.0, seed=5,
+                              vocab_size=cfg.vocab_size, prompt_len=(2, 14),
+                              max_new_tokens=(2, 8))
+        reqs = drive(eng, items, VirtualClock())
+        sched = [(r.output, r.t_submit, r.t_admit, r.t_first, r.t_done)
+                 for r in reqs]
+        return sched, eng.util_history, eng.stats()
+
+    sched_o, util_o, stats_o = serve(True)
+    sched_s, util_s, stats_s = serve(False)
+    assert sched_o == sched_s
+    assert util_o == util_s
+    assert stats_o["prefill_calls"] == stats_s["prefill_calls"]
+    assert stats_o["host_syncs"] < stats_s["host_syncs"]
+    # sync path blocks once per prefill launch on top of the chunk syncs
+    assert (stats_s["host_syncs"] - stats_o["host_syncs"]
+            == stats_s["prefill_calls"])
+
+
+def test_overlap_falls_back_for_instant_finish_rounds(setup):
+    """Admission rounds that may retire at the prefill token (eos_id set,
+    or max_new_tokens == 1) take the synchronous path so instant admits
+    still free slots for same-tick retries; outputs are unaffected."""
+    eng = _engine(setup, max_batch=1)
+    reqs = [eng.submit([1, 2, 3 + i], max_new_tokens=1) for i in range(3)]
+    eng.run()
+    assert all(r.done and len(r.output) == 1 for r in reqs)
+    assert eng.stats()["instant_admits"] == 3
+    assert [r.t_done for r in reqs] == [0, 0, 0]   # same-tick slot reuse
+
+
 def test_spf_policy_admits_shortest_first(setup):
     """policy='spf' admits the shortest queued prompt when a slot frees;
     FCFS admits in arrival order."""

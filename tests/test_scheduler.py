@@ -1,0 +1,137 @@
+"""Scheduler policies: pure unit tests (no model).
+
+The refactor contract: FCFS/SPF selection through the Scheduler interface
+is order-identical to the pre-refactor engine-internal ``_pick``; EDF
+orders by (deadline, submission), never thrashes on equal deadlines, and
+only evicts when a strictly tighter deadline waits.  The registry and the
+serve CLI must agree (also enforced by the benchmark smoke guard)."""
+
+import math
+
+import pytest
+
+from repro.serving.engine import Request
+from repro.serving.scheduler import (
+    EDF,
+    FCFS,
+    POLICIES,
+    SCHEDULERS,
+    SPF,
+    make_scheduler,
+)
+
+
+def _req(uid, prompt_len=4, deadline=None):
+    return Request(uid, list(range(1, prompt_len + 1)), deadline=deadline)
+
+
+def _fill(sched, reqs):
+    for r in reqs:
+        sched.submit(r)
+    return sched
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_registry_and_cli_agree():
+    assert set(POLICIES) == set(SCHEDULERS) == {"fcfs", "spf", "edf"}
+    from repro.launch.serve import build_parser
+    choices = None
+    for action in build_parser()._actions:
+        if "--policy" in action.option_strings:
+            choices = set(action.choices)
+    assert choices == set(SCHEDULERS)
+
+
+def test_make_scheduler_validation():
+    with pytest.raises(ValueError, match="policy"):
+        make_scheduler("lifo")
+    with pytest.raises(ValueError, match="non-preemptive"):
+        make_scheduler("fcfs", preempt=True)
+    assert not make_scheduler("edf").preemptive
+    assert make_scheduler("edf", preempt=True).preemptive
+    for name in SCHEDULERS:
+        assert make_scheduler(name).name == name
+
+
+# ------------------------------------------------------------- pick ordering
+
+
+def test_fcfs_picks_in_arrival_order():
+    s = _fill(FCFS(), [_req(i) for i in range(5)])
+    assert [r.uid for r in s.pick(3)] == [0, 1, 2]
+    assert [r.uid for r in s.pick(9)] == [3, 4]
+    assert len(s) == 0
+
+
+def test_spf_picks_shortest_prompt_fifo_among_equal():
+    # pre-refactor semantics: sort by (len(prompt), queue position)
+    reqs = [_req(0, 7), _req(1, 3), _req(2, 3), _req(3, 5)]
+    s = _fill(SPF(), reqs)
+    assert [r.uid for r in s.pick(3)] == [1, 2, 3]
+    assert [r.uid for r in s.pick(1)] == [0]
+
+
+def test_edf_orders_by_deadline_then_submission():
+    reqs = [_req(0, deadline=30.0), _req(1, deadline=10.0),
+            _req(2), _req(3, deadline=10.0), _req(4, deadline=5.0)]
+    s = _fill(EDF(), reqs)
+    # deadline order, FIFO among equal deadlines, deadline-less last
+    assert [r.uid for r in s.pick(5)] == [4, 1, 3, 0, 2]
+
+
+def test_requeue_front_precedes_queue():
+    s = _fill(FCFS(), [_req(0), _req(1)])
+    victim = _req(9)
+    s.submit(victim)
+    s.requeue_front(s.queue.pop())     # simulate eviction
+    assert [r.uid for r in s.pick(3)] == [9, 0, 1]
+
+
+# ------------------------------------------------------------------- victims
+
+
+def test_non_preemptive_policies_never_evict():
+    running = [(0, _req(10, deadline=100.0))]
+    for name in SCHEDULERS:
+        s = make_scheduler(name)
+        s.submit(_req(0, deadline=1.0))
+        assert s.victims(running, n_free=0) == []
+
+
+def test_edf_victims_strictly_earlier_only():
+    s = make_scheduler("edf", preempt=True)
+    running = [(0, _req(10, deadline=50.0)), (1, _req(11, deadline=20.0))]
+    # no waiter -> nothing to evict
+    assert s.victims(running, n_free=0) == []
+    # equal deadline never thrashes
+    s.submit(_req(0, deadline=50.0))
+    assert s.victims(running, n_free=0) == []
+    # strictly earlier than the LATEST-deadline runner: evict slot 0
+    s2 = make_scheduler("edf", preempt=True)
+    s2.submit(_req(1, deadline=30.0))
+    assert s2.victims(running, n_free=0) == [0]
+    # but a free slot absorbs the waiter instead
+    assert s2.victims(running, n_free=1) == []
+    # deadline-less waiters (infinite deadline) never preempt anything
+    s3 = make_scheduler("edf", preempt=True)
+    s3.submit(_req(2))
+    assert s3.victims(running, n_free=0) == []
+
+
+def test_edf_victims_pair_most_urgent_with_latest():
+    s = make_scheduler("edf", preempt=True)
+    running = [(0, _req(10, deadline=100.0)), (1, _req(11, deadline=40.0)),
+               (2, _req(12, deadline=60.0))]
+    s.submit(_req(0, deadline=5.0))
+    s.submit(_req(1, deadline=10.0))
+    s.submit(_req(2, deadline=90.0))   # not urgent enough for slot 1
+    # two urgent waiters evict the two latest-deadline runners, in order
+    assert s.victims(running, n_free=0) == [0, 2]
+
+
+def test_edf_deadline_key_is_inf_for_none():
+    from repro.serving.scheduler import _deadline
+    assert _deadline(_req(0)) == math.inf
+    assert _deadline(_req(0, deadline=3.5)) == 3.5

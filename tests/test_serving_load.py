@@ -16,6 +16,34 @@ def test_sweep_spans_three_families():
     assert len({c.arch for c in SERVING_LOAD_SWEEP}) >= 3
 
 
+def test_sweep_cell_names_unique_and_dimensions_present():
+    names = [c.name for c in SERVING_LOAD_SWEEP]
+    assert len(names) == len(set(names))
+    # the new committed benchmark dimensions: prompt distributions and the
+    # overload scheduling scenario ride along without renaming base cells
+    assert {c.prompt_dist for c in SERVING_LOAD_SWEEP} >= \
+        {"uniform", "fixed", "lognormal", "bimodal"}
+    overload = [c for c in SERVING_LOAD_SWEEP if c.deadline_slack is not None]
+    assert {(c.policy, c.preempt) for c in overload} == \
+        {("fcfs", False), ("edf", False), ("edf", True)}
+    base = [c for c in SERVING_LOAD_SWEEP
+            if c.policy == "fcfs" and not c.preempt
+            and c.prompt_dist == "uniform" and c.heavy_decode is None]
+    assert all("/" not in c.name.replace(f"{c.arch}/", "", 1).replace(
+        f"b{c.max_batch}/", "", 1) for c in base)   # historical names intact
+
+
+def test_smoke_registry_guard_detects_drift(monkeypatch):
+    """The --smoke CI guard passes on the real registry and fails loudly
+    when the scheduler registry and the CLI --policy choices diverge."""
+    from repro.serving import scheduler as sched_mod
+
+    sl._check_policy_registry()   # current surfaces agree
+    monkeypatch.setitem(sched_mod.SCHEDULERS, "fake", sched_mod.FCFS)
+    with pytest.raises(RuntimeError, match="drifted"):
+        sl._check_policy_registry()
+
+
 @pytest.mark.slow
 def test_cell_metrics_identical_across_runs():
     """The acceptance contract: two same-seed virtual-clock runs of a cell
@@ -27,6 +55,44 @@ def test_cell_metrics_identical_across_runs():
     # a different seed must actually change the workload
     c = sl.run_cell(cell, duration=12.0, seed=4)
     assert c["metrics"] != a["metrics"]
+
+
+@pytest.mark.slow
+def test_refactor_matches_committed_trajectory():
+    """The multi-layer refactor contract: a fresh run of a base-grid cell
+    reproduces the committed BENCH_serving.json metrics block byte-for-
+    byte (scheduler extraction + slot-state manager + overlapped prefill
+    changed no FCFS schedule)."""
+    import json
+    from pathlib import Path
+
+    bench = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    doc = json.loads(bench.read_text())
+    committed = {c["name"]: c for c in doc["cells"]}
+    cell = next(c for c in SERVING_LOAD_SWEEP
+                if c.name == "rwkv6-1.6b/b2/r1")
+    fresh = sl.run_cell(cell, duration=doc["duration"], seed=doc["seed"])
+    assert fresh["metrics"] == committed[cell.name]["metrics"]
+
+
+@pytest.mark.slow
+def test_overload_edf_improves_p95_ttft():
+    """The overload acceptance: under the committed overload scenario the
+    EDF cells beat FCFS on p95 TTFT, and preemptive EDF actually
+    preempts, with every preempted request still completing."""
+    cells = {(c.policy, c.preempt): c for c in SERVING_LOAD_SWEEP
+             if c.deadline_slack is not None}
+    built = sl._build("rwkv6-1.6b", True)
+    out = {k: sl.run_cell(c, seed=0, _built=built)
+           for k, c in cells.items()}
+    fcfs = out[("fcfs", False)]["metrics"]
+    for key in (("edf", False), ("edf", True)):
+        m = out[key]["metrics"]
+        assert m["ttft"]["p95"] < fcfs["ttft"]["p95"]
+        assert m["completed"] == m["submitted"]
+    assert out[("edf", True)]["sched"]["preemptions"] > 0
+    assert out[("edf", True)]["sched"]["resumes"] == \
+        out[("edf", True)]["sched"]["preemptions"]
 
 
 @pytest.mark.slow

@@ -79,6 +79,71 @@ def test_offered_load():
     assert wl.offered_load([]) == 0.0
 
 
+def test_trace_deadline_round_trip_and_backward_compat(tmp_path):
+    """The optional deadline survives the JSONL round trip, is omitted
+    when absent, and pre-deadline trace lines load unchanged."""
+    items = [wl.WorkloadItem(1.0, (1, 2), 3, deadline=25.5),
+             wl.WorkloadItem(2.0, (4,), 5)]
+    path = str(tmp_path / "trace.jsonl")
+    wl.save_trace(path, items)
+    again = wl.load_trace(path)
+    assert again[0].deadline == 25.5 and again[1].deadline is None
+    assert "deadline" not in items[1].to_json()
+    # a trace written before the deadline field existed still loads
+    legacy = wl.WorkloadItem.from_json({"t": 3.0, "prompt": [7, 8]})
+    assert legacy.deadline is None and legacy.max_new_tokens == 16
+
+
+def test_deadline_slack_is_decode_proportional():
+    items = wl.make_workload("poisson", rate=1.0, duration=20.0, seed=3,
+                             vocab_size=100, deadline_slack=3.0)
+    assert items
+    for it in items:
+        assert it.deadline == pytest.approx(it.t + 3.0 * it.max_new_tokens)
+    # frac < 1 leaves a seeded subset best-effort; frac is respected
+    mixed = wl.make_workload("poisson", rate=2.0, duration=60.0, seed=3,
+                             vocab_size=100, deadline_slack=3.0,
+                             deadline_frac=0.5)
+    n_dl = sum(it.deadline is not None for it in mixed)
+    assert 0 < n_dl < len(mixed)
+    # and by default nothing carries a deadline (historical behaviour)
+    plain = wl.make_workload("poisson", rate=1.0, duration=20.0, seed=3,
+                             vocab_size=100)
+    assert all(it.deadline is None for it in plain)
+
+
+def test_prompt_length_distributions():
+    kw = dict(rate=1.0, duration=60.0, seed=5, vocab_size=100,
+              prompt_len=(4, 12))
+    fixed = wl.make_workload("poisson", prompt_dist="fixed", **kw)
+    assert {len(it.prompt) for it in fixed} == {8}        # midpoint
+    logn = wl.make_workload("poisson", prompt_dist="lognormal",
+                            prompt_len_long=40, **kw)
+    lens = [len(it.prompt) for it in logn]
+    assert min(lens) >= 4 and max(lens) <= 40
+    assert len(set(lens)) > 3                             # actually spread
+    bi = wl.make_workload("poisson", prompt_dist="bimodal",
+                          prompt_len_long=48, **kw)
+    lens = [len(it.prompt) for it in bi]
+    assert all(4 <= n <= 12 or 36 <= n <= 48 for n in lens)
+    with pytest.raises(ValueError, match="prompt_dist"):
+        wl.make_workload("poisson", prompt_dist="zipf", **kw)
+    # the default distribution is draw-for-draw the historical one: same
+    # seed, same items as an explicit "uniform"
+    assert wl.make_workload("poisson", **kw) == \
+        wl.make_workload("poisson", prompt_dist="uniform", **kw)
+
+
+def test_heavy_decode_mixture():
+    kw = dict(rate=1.0, duration=60.0, seed=9, vocab_size=100,
+              max_new_tokens=(6, 10))
+    heavy = wl.make_workload("poisson", heavy_decode=(1.0, 32, 48), **kw)
+    assert {32 <= it.max_new_tokens <= 48 for it in heavy} == {True}
+    mixed = wl.make_workload("poisson", heavy_decode=(0.2, 32, 48), **kw)
+    ms = [it.max_new_tokens for it in mixed]
+    assert any(m >= 32 for m in ms) and any(m <= 10 for m in ms)
+
+
 def test_virtual_clock_skip_never_rewinds():
     c = wl.VirtualClock()
     c.tick(); c.tick()
@@ -131,3 +196,31 @@ def test_aggregate_scaling_and_counts():
     assert agg["queue_wait"]["p99"] == 2 * 2.0     # ticks * tick_seconds
     assert agg["tokens_per_sec"] == pytest.approx(8 / 20.0)
     assert agg["mean_util"] == pytest.approx(0.75)
+    # deadline-less, preemption-free runs aggregate to the historical
+    # dict exactly: no slo / preemption keys (BENCH history contract)
+    assert "slo" not in agg and "preemption" not in agg
+
+
+def test_aggregate_slo_attainment():
+    met = _req(0, 0, 6, 4)          # t_done 6, finish 7
+    met.deadline = 7.0
+    missed = _req(1, 3, 9, 4)       # t_done 9, finish 10
+    missed.deadline = 9.5
+    free = _req(2, 0, 4, 2)         # no deadline: not an SLO sample
+    unfinished = Request(9, [1])
+    unfinished.deadline = 100.0     # deadline'd but never completed: a miss
+    agg = sm.aggregate([met, missed, free, unfinished], ticks=10)
+    assert agg["slo"] == {"n": 3, "met": 1, "violations": 2,
+                          "attainment": pytest.approx(1 / 3)}
+    # the summary formatter surfaces it
+    assert "attainment" in sm.format_summary(agg)
+
+
+def test_aggregate_preemption_counters():
+    r = _req(0, 0, 6, 4)
+    r.n_preempts = 2
+    r.t_resumes = [3, 5]
+    agg = sm.aggregate([r, _req(1, 0, 4, 2)], ticks=10)
+    assert agg["preemption"] == {"preemptions": 2, "resumes": 2,
+                                 "preempted_requests": 1}
+    assert "evictions" in sm.format_summary(agg)
