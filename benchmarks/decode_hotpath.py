@@ -36,6 +36,7 @@ from benchmarks.common import Row
 from repro.configs import get_config
 from repro.dist.sharding import make_sharder
 from repro.models.lm import build_model
+from repro.plan import ServingPlan, io as plan_io
 from repro.serving import ServingEngine
 from repro.testing import reduced_config
 
@@ -57,12 +58,18 @@ def _workload(vocab_size: int, n_requests: int, seed: int):
 def run_config(model, params, sharder, vocab_size: int, *,
                sync_every: int, bucketed: bool, n_requests: int = 8,
                max_new: int = 32, max_batch: int = 4, max_len: int = 64,
-               seed: int = 0) -> Dict[str, object]:
+               seed: int = 0, reduced: bool = True) -> Dict[str, object]:
     """Measure one (sync_every, bucketed) point: warm the jit caches with
-    one full closed-loop pass, reset telemetry, then time a second pass."""
-    engine = ServingEngine(model, params, sharder, max_batch=max_batch,
-                           max_len=max_len, seed=seed,
-                           sync_every=sync_every, bucketed_prefill=bucketed)
+    one full closed-loop pass, reset telemetry, then time a second pass.
+    The point is expressed as a :class:`ServingPlan` (embedded in the
+    output cell), so the trajectory records the design point."""
+    plan = ServingPlan(arch=model.cfg.name, reduced=reduced,
+                       max_batch=max_batch,
+                       max_len=max_len, sync_every=sync_every,
+                       bucketed_prefill=bucketed,
+                       provenance={"source": "decode_hotpath grid"})
+    engine = ServingEngine.from_plan(plan, params, model=model,
+                                     sharder=sharder, seed=seed)
     prompts = _workload(vocab_size, n_requests, seed)
     for warm in (True, False):
         if warm:
@@ -84,6 +91,7 @@ def run_config(model, params, sharder, vocab_size: int, *,
         "n_requests": n_requests,
         "max_new": max_new,
         "max_batch": max_batch,
+        "plan": plan_io.to_dict(engine.plan.resolve()),
         "deterministic": {  # pure function of (workload seed, config)
             "ticks": int(s["ticks"]),
             "tokens": int(s["total_tokens"]),
@@ -115,7 +123,7 @@ def measure(arch: str = "rwkv6-1.6b", *, reduced: bool = True, seed: int = 0,
             cells.append(run_config(model, params, sharder, cfg.vocab_size,
                                     sync_every=se, bucketed=bucketed,
                                     n_requests=n_requests, max_new=max_new,
-                                    seed=seed))
+                                    seed=seed, reduced=reduced))
     return {"schema": SCHEMA, "arch": arch, "reduced": reduced, "seed": seed,
             "cells": cells}
 

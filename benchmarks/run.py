@@ -7,7 +7,11 @@ Prints ``name,us_per_call,derived`` CSV.
 ``--smoke`` runs every suite in a tiny configuration (a couple of cells,
 short sequences) and never rewrites the committed BENCH_*.json trajectory
 files — it exists so tier-1 CI can prove the benchmark scripts still run
-between the real (weekly / manual) sweeps.
+between the real (weekly / manual) sweeps.  The serving_load smoke
+additionally guards the plan subsystem: it autotunes one tiny cell and
+fails loudly if the result fails ``ServingPlan.validate()`` or the plan
+JSON schema drifts from the dataclass fields (see
+``serving_load._check_plan_surface``).
 """
 
 from __future__ import annotations

@@ -42,7 +42,8 @@ from benchmarks.common import Row
 from repro.configs import SERVING_LOAD_SWEEP, ServingLoadCell, get_config
 from repro.dist.sharding import make_sharder
 from repro.models.lm import build_model
-from repro.serving import ServingEngine, drive, make_workload
+from repro.plan import io as plan_io
+from repro.serving import ServingEngine, drive, profile_items
 from repro.serving import metrics as smetrics
 from repro.testing import reduced_config
 
@@ -76,28 +77,31 @@ def _calibrate_tick_seconds(engine: ServingEngine, vocab_size: int,
 
 
 def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
-             reduced: bool = True, max_len: int = 64,
+             reduced: bool = True,
              _built=None) -> Dict[str, object]:
-    """One sweep cell: build (or reuse) the model, replay the workload on a
-    virtual clock, return {identity, metrics, wall}.
+    """One sweep cell: build (or reuse) the model, serve the cell's
+    workload profile under the cell's *plan* on a virtual clock, return
+    {identity, plan, metrics, wall}.
 
-    Cells with non-default scheduling dimensions (policy / preempt /
-    deadline_slack / prompt_dist) additionally report a deterministic
-    ``sched`` block (policy identity + engine preemption counters);
-    default-grid cells emit the exact historical document shape."""
+    Every cell embeds its resolved plan dict, so the committed trajectory
+    records exactly which design point produced each number (and any cell
+    can be re-served from its recorded plan alone — see
+    benchmarks/README.md).  Cells with non-default scheduling dimensions
+    additionally report a deterministic ``sched`` block; base-grid cells
+    emit the historical document shape plus the ``plan`` key."""
+    import dataclasses
+
     cfg, model, params = _built or _build(cell.arch, reduced)
-    sharder = make_sharder(cfg, None, "decode")
-    engine = ServingEngine(model, params, sharder, max_batch=cell.max_batch,
-                           max_len=max_len, seed=seed, policy=cell.policy,
-                           preempt=cell.preempt)
+    # the embedded plan must record the model actually measured: a
+    # full-size run flips the plan's `reduced` identity bit too
+    plan = cell.plan if cell.plan.reduced == reduced else \
+        dataclasses.replace(cell.plan, reduced=reduced)
+    sharder = make_sharder(cfg, None, plan.shard_mode)
+    engine = ServingEngine.from_plan(plan, params, model=model,
+                                     sharder=sharder, seed=seed)
     duration = cell.duration if cell.duration is not None else duration
-    items = make_workload("poisson", rate=cell.rate, duration=duration,
-                          seed=seed, vocab_size=cfg.vocab_size,
-                          prompt_len=(4, 12), max_new_tokens=(6, 10),
-                          prompt_dist=cell.prompt_dist,
-                          prompt_len_long=max_len - 1,
-                          heavy_decode=cell.heavy_decode,
-                          deadline_slack=cell.deadline_slack)
+    items = profile_items(cell.workload, vocab_size=cfg.vocab_size,
+                          seed=seed, duration=duration)
     t0 = time.perf_counter()
     reqs = drive(engine, items)
     wall_s = time.perf_counter() - t0
@@ -113,6 +117,7 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
         "max_batch": cell.max_batch,
         "rate": cell.rate,
         "duration": duration,
+        "plan": plan_io.to_dict(plan.resolve()),  # the design point
         "metrics": agg,  # virtual-clock: deterministic for a fixed seed
         "wall": {  # host-dependent; excluded from the determinism contract
             "seconds": wall_s,
@@ -136,15 +141,37 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
             "preemptions": int(s["preemptions"]),
             "resumes": int(s["resumes"]),
             "evicted_tokens": int(s["evicted_tokens"]),
+            "shed": int(s["shed"]),
         }
     return out
 
 
+def autotuned_overload_cell(seed: int = 0) -> ServingLoadCell:
+    """The planner's acceptance cell: autotune the committed overload /
+    heavy-decode workload (the FCFS cell's profile) and serve it under
+    the winning plan, tagged ``auto`` — the serving-level analogue of the
+    paper's per-problem-size search, recorded in the trajectory next to
+    the hand-picked design points it competes with."""
+    from repro.plan import planner
+
+    base = next(c for c in SERVING_LOAD_SWEEP
+                if c.deadline_slack is not None and c.policy == "fcfs")
+    plan = planner.autotune(base.arch, base.workload, seed=seed,
+                            max_len=base.plan.max_len)
+    return ServingLoadCell(family=base.family, plan=plan,
+                           workload=base.workload, tag="auto")
+
+
 def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
           cells: Optional[Sequence[ServingLoadCell]] = None,
-          duration: Optional[float] = None) -> Dict[str, object]:
-    """The full sweep -> the BENCH_serving.json document."""
+          duration: Optional[float] = None,
+          autotune: bool = False) -> Dict[str, object]:
+    """The full sweep -> the BENCH_serving.json document.  With
+    ``autotune=True`` (the real, BENCH-writing runs) the overload
+    scenario additionally gets its autotuned cell appended."""
     cells = list(cells if cells is not None else SERVING_LOAD_SWEEP)
+    if autotune:
+        cells.append(autotuned_overload_cell(seed))
     duration = duration if duration is not None else (32.0 if fast else 256.0)
     built: Dict[str, tuple] = {}  # one model build per arch, many cells
     out_cells: List[Dict[str, object]] = []
@@ -205,21 +232,43 @@ def _check_policy_registry() -> None:
                            f"never exercised by SERVING_LOAD_SWEEP")
 
 
+def _check_plan_surface() -> None:
+    """CI guard for the plan subsystem: the plan JSON schema must match
+    the dataclass fields, and a tiny autotune run must return a plan that
+    passes ``ServingPlan.validate()`` and round-trips through JSON —
+    loudly, in tier-1, so the trajectory files can never embed a plan the
+    code cannot read back."""
+    from repro.plan import ServingPlan, WorkloadProfile, planner
+
+    plan_io.check_schema()
+    tiny = planner.autotune(
+        "rwkv6-1.6b", WorkloadProfile(rate=0.5, duration=6.0),
+        max_batches=(2,), sync_everys=(1, 2), probe_duration=6.0)
+    tiny.validate()   # autotune validates too; fail loudly if that rots
+    rt = plan_io.from_dict(plan_io.to_dict(tiny))
+    if rt != tiny:
+        raise RuntimeError("autotuned plan does not round-trip through "
+                           "JSON; fix repro.plan.io coercions")
+    if not isinstance(rt, ServingPlan) or rt.arch != "rwkv6-1.6b":
+        raise RuntimeError("autotune returned a malformed plan")
+
+
 def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
     """benchmarks.run harness entry: emit one CSV row per cell and refresh
     BENCH_serving.json in the working directory.  ``smoke`` runs one tiny
     base cell plus the overload scenario (every policy in it, preemption
-    included) and does NOT touch BENCH_serving.json — it proves the
-    scripts and the scheduler registry still work (the tier-1 CI guard)."""
+    included), checks the plan JSON schema, and autotunes one tiny cell —
+    and does NOT touch BENCH_serving.json; it proves the scripts, the
+    scheduler registry, and the plan subsystem still work (the tier-1 CI
+    guard)."""
     if smoke:
-        import dataclasses
-
         _check_policy_registry()
+        _check_plan_surface()
         base = [c for c in SERVING_LOAD_SWEEP
                 if c.family == "rwkv" and c.max_batch == 2
                 and c.policy == "fcfs" and c.prompt_dist == "uniform"
                 and c.heavy_decode is None and c.deadline_slack is None][-1:]
-        overload = [dataclasses.replace(c, duration=8.0)
+        overload = [c.with_duration(8.0)
                     for c in SERVING_LOAD_SWEEP
                     if c.deadline_slack is not None]
         if not base or not overload:  # keep the CI guard loud on reshapes
@@ -227,7 +276,7 @@ def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
                                "cell; update the filter")
         doc = sweep(fast=True, cells=base + overload, duration=8.0)
     else:
-        doc = sweep(fast=fast)
+        doc = sweep(fast=fast, autotune=True)
         write(doc)
     for c in doc["cells"]:
         m, w = c["metrics"], c["wall"]
@@ -252,8 +301,11 @@ def main() -> None:
     ap.add_argument("--full-size", action="store_true",
                     help="full-size configs (default: reduced, CPU-friendly)")
     args = ap.parse_args()
+    # both BENCH-writing entries (this and benchmarks.run) include the
+    # autotuned overload cell, so the committed document shape is the same
+    # whichever path regenerated it
     doc = sweep(fast=not args.full, seed=args.seed,
-                reduced=not args.full_size)
+                reduced=not args.full_size, autotune=True)
     write(doc, args.out)
     print(f"wrote {args.out}: {len(doc['cells'])} cells, "
           f"families={doc['families']}")

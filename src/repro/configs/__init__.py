@@ -25,6 +25,7 @@ from repro.configs.base import (
     DECODE_32K,
     LONG_500K,
 )
+from repro.plan.plan import ServingPlan, WorkloadProfile
 
 from repro.configs import (  # noqa: E402  (import the arch modules)
     qwen2_5_14b,
@@ -116,33 +117,118 @@ DEEPBENCH_TASKS = (
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
 class ServingLoadCell:
     """One cell of the serving-load benchmark (benchmarks/serving_load.py):
-    an architecture served at ``max_batch`` slots under Poisson arrivals at
-    ``rate`` requests per clock unit.  ``family`` tags the model class so
-    the benchmark provably spans dense / MoE / RWKV.
+    a *design point* (:class:`repro.plan.ServingPlan`) serving a
+    *workload* (:class:`repro.plan.WorkloadProfile`).  ``family`` tags the
+    model class so the benchmark provably spans dense / MoE / RWKV; an
+    optional ``tag`` marks derived cells (e.g. the autotuned variant).
 
-    The scheduling dimensions (``policy`` / ``preempt`` /
-    ``deadline_slack``) and the prompt-length distribution default to the
-    original grid's values, and :attr:`name` only appends suffixes for
-    non-default settings — so every pre-existing cell keeps its exact
-    historical name (and, on the virtual clock, its exact ``metrics``
-    block) while the overload / prompt-distribution cells appear as new
-    rows in ``BENCH_serving.json``."""
+    A cell *is* ``(family, plan, workload, tag)``.  The historical
+    constructor signature — ``ServingLoadCell(arch, family, max_batch,
+    rate, policy=..., prompt_dist=..., ...)`` — is accepted via a
+    converter that assembles the plan and profile from those field names,
+    and the historical attributes remain readable as properties, so every
+    pre-existing cell keeps its exact name (and, on the virtual clock,
+    its exact ``metrics`` block) while new cells can be built directly
+    from a plan (``ServingLoadCell(family=..., plan=..., workload=...)``).
+    """
 
-    arch: str
-    family: str          # "dense" | "moe" | "rwkv"
-    max_batch: int
-    rate: float
-    policy: str = "fcfs"             # scheduler registry key
-    preempt: bool = False            # EDF evict-to-host preemption
-    prompt_dist: str = "uniform"     # workload.PROMPT_DISTS
-    # (frac, lo, hi): seeded frac of requests decode lo..hi tokens — the
-    # long-tail service-time mixture (slot occupancy = decode ticks)
-    heavy_decode: Optional[Tuple[float, int, int]] = None
-    deadline_slack: Optional[float] = None   # decode-proportional SLO
-    duration: Optional[float] = None         # override the sweep default
+    # the benchmark's historical per-cell constants, now recorded in the
+    # cell's plan/profile instead of hardcoded in run_cell
+    MAX_LEN = 64
+    PROMPT_LEN = (4, 12)
+    MAX_NEW = (6, 10)
+
+    def __init__(self, arch: Optional[str] = None, family: str = "",
+                 max_batch: Optional[int] = None,
+                 rate: Optional[float] = None, *,
+                 policy: str = "fcfs", preempt: bool = False,
+                 prompt_dist: str = "uniform",
+                 heavy_decode: Optional[Tuple[float, int, int]] = None,
+                 deadline_slack: Optional[float] = None,
+                 duration: Optional[float] = None,
+                 plan: Optional["ServingPlan"] = None,
+                 workload: Optional["WorkloadProfile"] = None,
+                 tag: str = ""):
+        if plan is None:
+            if arch is None or max_batch is None:
+                raise ValueError("ServingLoadCell needs (arch, max_batch) "
+                                 "or an explicit plan")
+            plan = ServingPlan(arch=arch, max_batch=max_batch,
+                               max_len=self.MAX_LEN, policy=policy,
+                               preempt=preempt)
+        if workload is None:
+            if rate is None:
+                raise ValueError("ServingLoadCell needs rate or an "
+                                 "explicit workload profile")
+            workload = WorkloadProfile(
+                kind="poisson", rate=rate, duration=duration,
+                prompt_len=self.PROMPT_LEN, max_new_tokens=self.MAX_NEW,
+                prompt_dist=prompt_dist,
+                prompt_len_long=plan.max_len - 1,
+                heavy_decode=heavy_decode, deadline_slack=deadline_slack)
+        self.family = family
+        self.plan = plan
+        self.workload = workload
+        self.tag = tag
+
+    # ----------------------------------------------- historical field names
+    @property
+    def arch(self) -> str:
+        return self.plan.arch
+
+    @property
+    def max_batch(self) -> int:
+        return self.plan.max_batch
+
+    @property
+    def policy(self) -> str:
+        return self.plan.policy
+
+    @property
+    def preempt(self) -> bool:
+        return self.plan.preempt
+
+    @property
+    def rate(self) -> float:
+        return self.workload.rate
+
+    @property
+    def prompt_dist(self) -> str:
+        return self.workload.prompt_dist
+
+    @property
+    def heavy_decode(self) -> Optional[Tuple[float, int, int]]:
+        return self.workload.heavy_decode
+
+    @property
+    def deadline_slack(self) -> Optional[float]:
+        return self.workload.deadline_slack
+
+    @property
+    def duration(self) -> Optional[float]:
+        return self.workload.duration
+
+    def with_duration(self, duration: float) -> "ServingLoadCell":
+        """A copy with the workload span replaced (smoke runs)."""
+        return ServingLoadCell(
+            family=self.family, plan=self.plan, tag=self.tag,
+            workload=dataclasses.replace(self.workload, duration=duration))
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, ServingLoadCell)
+                and (self.family, self.plan, self.workload, self.tag)
+                == (other.family, other.plan, other.workload, other.tag))
+
+    def __hash__(self) -> int:
+        # plans carry dict fields (tile_plans/provenance), so hash the
+        # stable identity subset; eq-equal cells agree on all of these
+        return hash((self.family, self.tag, self.name))
+
+    def __repr__(self) -> str:
+        return (f"ServingLoadCell({self.name!r}, family={self.family!r}, "
+                f"plan={self.plan.summary()!r})")
 
     @property
     def name(self) -> str:
@@ -153,6 +239,8 @@ class ServingLoadCell:
             n += "/heavy"
         if self.policy != "fcfs" or self.preempt:
             n += f"/{self.policy}" + ("+p" if self.preempt else "")
+        if self.tag:
+            n += f"/{self.tag}"
         return n
 
 

@@ -43,9 +43,15 @@ def _pad(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-def tile_vmem_bytes(cfg: RNNCellConfig, bh: int) -> int:
-    """VMEM bytes claimed per grid step (weights + state + io)."""
-    g, H, D, B = cfg.n_gates, cfg.hidden, cfg.d, cfg.batch
+def tile_vmem_bytes(cfg: RNNCellConfig, bh: int, *,
+                    max_batch: Optional[int] = None) -> int:
+    """VMEM bytes claimed per grid step (weights + state + io).
+
+    ``max_batch`` overrides ``cfg.batch``: the serving engine decodes
+    ``max_batch`` slots per step, so the h/c state and io buffers scale
+    with it even though the DeepBench cell configs say batch 1."""
+    g, H, D = cfg.n_gates, cfg.hidden, cfg.d
+    B = cfg.batch if max_batch is None else max_batch
     wbytes = 1 if cfg.precision in ("int8", "blocked_fp") else 2
     w_block = (D + H) * g * bh * wbytes
     n_tiles = H // bh
@@ -57,11 +63,19 @@ def tile_vmem_bytes(cfg: RNNCellConfig, bh: int) -> int:
 
 
 def plan_metrics(cfg: RNNCellConfig, bh: int,
-                 spec: hw.HardwareSpec = hw.DEFAULT) -> Plan:
-    g, H, D, B = cfg.n_gates, cfg.hidden, cfg.d, cfg.batch
+                 spec: hw.HardwareSpec = hw.DEFAULT, *,
+                 max_batch: Optional[int] = None) -> Plan:
+    """Score one tile choice.  ``max_batch`` threads the *serving* batch
+    dimension through the model: the engine runs a batched decode over
+    ``max_batch`` slots, so both the compute bound (sublane-padded batch)
+    and the VMEM working set (h/c state, io) must be scored at the batch
+    the engine actually runs — a tile that is VMEM-resident at batch 1
+    can spill at batch 64, flipping the best plan to smaller tiles."""
+    g, H, D = cfg.n_gates, cfg.hidden, cfg.d
+    B = cfg.batch if max_batch is None else max_batch
     R = D + H
     n_tiles = H // bh
-    vmem = tile_vmem_bytes(cfg, bh)
+    vmem = tile_vmem_bytes(cfg, bh, max_batch=max_batch)
     resident = vmem <= hw.vmem_budget(spec)
 
     # --- utilization: 1-D fragmentation on R only (Fig. 4b).  The batch-
@@ -115,16 +129,18 @@ def candidate_tiles(H: int) -> List[int]:
     return c or [H]
 
 
-def search(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT
-           ) -> List[Plan]:
-    return [plan_metrics(cfg, bh, spec) for bh in candidate_tiles(cfg.hidden)]
+def search(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT, *,
+           max_batch: Optional[int] = None) -> List[Plan]:
+    return [plan_metrics(cfg, bh, spec, max_batch=max_batch)
+            for bh in candidate_tiles(cfg.hidden)]
 
 
-def best_plan(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT) -> Plan:
-    plans = [p for p in search(cfg, spec)
+def best_plan(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT, *,
+              max_batch: Optional[int] = None) -> Plan:
+    plans = [p for p in search(cfg, spec, max_batch=max_batch)
              if p.vmem_bytes <= hw.vmem_budget(spec)]
     if not plans:  # weights can never be resident; stream with big tiles
-        plans = search(cfg, spec)
+        plans = search(cfg, spec, max_batch=max_batch)
     return min(plans, key=lambda p: p.step_latency_s)
 
 

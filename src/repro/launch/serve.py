@@ -1,6 +1,9 @@
 """Serving launcher: batched request serving through the continuous-
 batching engine, optionally under an open-loop arrival process.
 
+The CLI is *plan-centric*: every serving design parameter lives in a
+:class:`repro.plan.ServingPlan`, and the engine is built from one.
+
   # legacy closed-loop mode: submit N requests up front, drain
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
       --requests 8 --max-new 16
@@ -9,10 +12,22 @@ batching engine, optionally under an open-loop arrival process.
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
       --arrival poisson --rate 0.5 --duration 64 --seed 0
 
-  # deadline-driven overload: EDF admission with preemption, SLO report
+  # serve a recorded design point (e.g. one embedded in BENCH_serving.json)
+  PYTHONPATH=src python -m repro.launch.serve --plan plan.json \\
+      --arrival poisson --rate 0.8 --duration 64
+
+  # search the design space for this workload, save + serve the winner
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
-      --arrival poisson --rate 2.0 --duration 64 --prompt-dist bimodal \\
-      --policy edf --preempt --deadline-slack 3.0
+      --autotune --arrival poisson --rate 2.0 --duration 64 \\
+      --deadline-slack 3.0 --save-plan tuned.json
+
+``--plan`` loads a plan JSON (``repro.plan.io``); ``--autotune`` runs the
+serving-level design-space search (``repro.plan.planner``) against the
+CLI-described workload.  Any knob flag given *in addition* is an explicit
+override of the plan and is recorded in ``plan.provenance`` — so a served
+plan always says where each of its values came from.  Without either,
+the flags resolve to the historical CLI defaults and build a plan
+internally: the behavior (and the virtual-clock schedule) is unchanged.
 
 ``--arrival {poisson,mmpp,trace}`` replays a workload from
 ``repro.serving.workload`` and prints the TTFT/TPOT/queue-wait percentile
@@ -24,14 +39,15 @@ real time and additionally reports measured wall tokens/sec.
 (``repro.serving.scheduler.SCHEDULERS``) so the CLI can never offer a
 policy the engine does not implement; the benchmark smoke guard asserts
 this stays true.  ``--deadline-slack S`` stamps every generated request
-with the absolute deadline ``arrival + S * max_new`` clock units — the
-decode-proportional SLO EDF orders by — and ``--deadline-frac`` leaves a
-random fraction of traffic best-effort.
+with the absolute deadline ``arrival + S * max_new`` clock units, and
+``--shed-late`` turns on deadline-aware admission control (reject
+provably-late requests at submit).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import logging
 import time
 
@@ -41,45 +57,92 @@ import numpy as np
 from repro.configs import get_config
 from repro.dist.sharding import make_sharder
 from repro.models.lm import build_model
+from repro.plan import ServingPlan, WorkloadProfile, io as plan_io
 from repro.serving import ServingEngine
 from repro.serving import metrics as smetrics
 from repro.serving import workload as wl
-from repro.serving.sampler import SamplerConfig
 from repro.serving.scheduler import POLICIES
 from repro.testing import reduced_config
+
+# CLI flag -> plan field, for flags that map 1:1 (None = "not given";
+# the plan's value stands unless the user typed the flag)
+_PLAN_FLAGS = (
+    ("arch", "arch"),
+    ("reduced", "reduced"),
+    ("max_batch", "max_batch"),
+    ("max_len", "max_len"),
+    ("temperature", "temperature"),
+    ("sync_every", "sync_every"),
+    ("policy", "policy"),
+    ("preempt", "preempt"),
+    ("shed_late", "shed_late"),
+    ("truncate_prompts", "truncate_prompts"),
+)
+
+# the pre-plan CLI defaults, applied only when no plan file is loaded so
+# a flagless invocation behaves exactly as it always has
+_CLI_DEFAULT_MAX_LEN = 64
 
 
 def build_parser() -> argparse.ArgumentParser:
     """The CLI surface, as a factory so tools (and the benchmark smoke
-    guard) can introspect it without running a model."""
+    guard) can introspect it without running a model.
+
+    Plan-covered knobs default to ``None`` ("not given"): their effective
+    defaults live in :class:`repro.plan.ServingPlan`, and a given flag
+    becomes a recorded override of whatever plan is in force."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (required unless --plan carries "
+                         "one)")
+    ap.add_argument("--reduced", action="store_true", default=None)
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="load a ServingPlan JSON (e.g. saved by "
+                         "--save-plan, or the 'plan' dict of a committed "
+                         "BENCH_serving.json cell); knob flags given as "
+                         "well become recorded overrides")
+    ap.add_argument("--autotune", action="store_true",
+                    help="search the serving design space (bucket set x "
+                         "sync_every x max_batch x policy) for the "
+                         "CLI-described workload and serve the winning "
+                         "plan (repro.plan.planner.autotune)")
+    ap.add_argument("--save-plan", default=None, metavar="PATH",
+                    help="write the resolved plan (explicit buckets, "
+                         "provenance included) as JSON before serving")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="decode slots (plan default: 4)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help=f"cache length (CLI default: "
+                         f"{_CLI_DEFAULT_MAX_LEN})")
+    ap.add_argument("--temperature", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0,
                     help="workload + sampler seed")
-    ap.add_argument("--sync-every", type=int, default=1,
+    ap.add_argument("--sync-every", type=int, default=None,
                     help="decode ticks per host sync: the fused on-device "
                          "decode loop runs this many ticks between host "
-                         "interventions (admission/retire)")
-    ap.add_argument("--policy", default="fcfs", choices=POLICIES,
+                         "interventions (admission/retire); plan default 1")
+    ap.add_argument("--policy", default=None, choices=POLICIES,
                     help="admission order: FCFS, shortest-prompt-first, or "
                          "earliest-deadline-first (choices come from the "
-                         "scheduler registry)")
-    ap.add_argument("--preempt", action="store_true",
+                         "scheduler registry; plan default fcfs)")
+    ap.add_argument("--preempt", action="store_true", default=None,
                     help="allow the scheduler to evict a running request "
                          "to host memory when a strictly tighter deadline "
                          "waits (EDF only); evicted requests resume "
                          "bit-exactly once a slot frees")
+    ap.add_argument("--shed-late", action="store_true", default=None,
+                    help="deadline-aware admission control: reject "
+                         "requests at submit when they provably cannot "
+                         "meet their deadline even if admitted instantly")
     ap.add_argument("--no-bucketed-prefill", action="store_true",
+                    default=None,
                     help="legacy exact-length batch-1 prefill per request "
                          "(compiles per distinct prompt length) instead of "
                          "length-bucketed batched prefill")
     ap.add_argument("--no-overlap-prefill", action="store_true",
+                    default=None,
                     help="serialize admission with decode: block on the "
                          "prefill sample readback before launching the "
                          "decode chunk (the pre-overlap engine behaviour; "
@@ -115,7 +178,7 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=("virtual", "wall"),
                     help="virtual: deterministic tick clock; wall: pace "
                          "arrivals in real time")
-    ap.add_argument("--truncate-prompts", action="store_true",
+    ap.add_argument("--truncate-prompts", action="store_true", default=None,
                     help="warn + drop the tail of prompts longer than "
                          "max_len-1 instead of rejecting them (useful when "
                          "replaying traces recorded on a larger engine)")
@@ -124,27 +187,109 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _workload_profile(args) -> WorkloadProfile:
+    """The CLI-described workload as a declarative profile (drives both
+    the autotuner and the replay loop)."""
+    kind = args.arrival if args.arrival != "batch" else "poisson"
+    return WorkloadProfile(
+        kind=kind, rate=args.rate, duration=args.duration,
+        max_new_tokens=(args.max_new, args.max_new),
+        prompt_dist=args.prompt_dist,
+        deadline_slack=args.deadline_slack,
+        deadline_frac=args.deadline_frac,
+        trace_path=args.trace_file)
+
+
+def resolve_plan(args, parser: argparse.ArgumentParser) -> ServingPlan:
+    """Turn the parsed CLI into one validated plan.
+
+    Precedence: ``--plan`` file or ``--autotune`` result as the base
+    (plain CLI defaults otherwise), then every explicitly-given knob flag
+    overrides its plan field — and the override set is recorded under
+    ``provenance["cli_overrides"]`` so the served design point is fully
+    accounted for."""
+    overrides = {}
+    for flag, field in _PLAN_FLAGS:
+        v = getattr(args, flag)
+        if v is not None:
+            overrides[field] = v
+    if args.no_bucketed_prefill:
+        overrides["bucketed_prefill"] = False
+    if args.no_overlap_prefill:
+        overrides["overlap_prefill"] = False
+
+    if args.plan and args.autotune:
+        parser.error("--plan and --autotune are mutually exclusive")
+    if args.plan:
+        base = plan_io.load_plan(args.plan)
+        source = f"file:{args.plan}"
+    elif args.autotune:
+        if not args.arch:
+            parser.error("--autotune requires --arch")
+        from repro.plan import planner
+
+        base = planner.autotune(
+            args.arch, _workload_profile(args), seed=args.seed,
+            reduced=bool(args.reduced),
+            max_len=args.max_len or _CLI_DEFAULT_MAX_LEN)
+        source = "autotune"
+    else:
+        if not args.arch:
+            parser.error("--arch is required (or pass --plan)")
+        base = ServingPlan(arch=args.arch, reduced=bool(args.reduced),
+                           max_len=_CLI_DEFAULT_MAX_LEN)
+        source = "cli"
+    # a typed flag only *overrides* when it changes the base plan's value
+    # (e.g. --autotune requires --arch, which the autotuned plan already
+    # carries; recording it would misstate the plan's provenance)
+    overrides = {k: v for k, v in overrides.items()
+                 if getattr(base, k) != v}
+    # a max_len override invalidates an explicit bucket set pinned to the
+    # old max_len-1 (resolved plans — e.g. BENCH-embedded ones — always
+    # carry one): reset it to the new default rather than failing
+    # validation, and record the reset like any other override
+    new_len = overrides.get("max_len")
+    if (new_len is not None and base.buckets is not None
+            and base.buckets[-1] != new_len - 1):
+        overrides["buckets"] = None
+    # tile plans are scored at (arch, max_batch) — overriding either
+    # would leave a stale kernel design half, so recompute them
+    if base.tile_plans and ({"arch", "max_batch"} & set(overrides)):
+        from repro import hw
+        from repro.plan import planner
+
+        overrides["tile_plans"] = planner.tile_plans_for(
+            overrides.get("arch", base.arch),
+            overrides.get("max_batch", base.max_batch), hw.DEFAULT)
+    plan = dataclasses.replace(base, **overrides) if overrides else base
+    prov = dict(plan.provenance)
+    prov["source"] = source
+    if overrides:
+        prov["cli_overrides"] = dict(overrides)
+    return dataclasses.replace(plan, provenance=prov).validate()
+
+
 def main() -> None:
-    args = build_parser().parse_args()
+    parser = build_parser()
+    args = parser.parse_args()
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
     if args.verbose:  # scope DEBUG to our loggers; root DEBUG floods w/ jax
         logging.getLogger("repro").setLevel(logging.DEBUG)
 
-    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    plan = resolve_plan(args, parser)
+    print(f"plan: {plan.summary()}")
+    if args.save_plan:
+        plan_io.save_plan(plan.resolve(), args.save_plan)
+        print(f"wrote plan to {args.save_plan}")
+
+    cfg = reduced_config(plan.arch) if plan.reduced else get_config(plan.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    sharder = make_sharder(cfg, None, "decode")
-    engine = ServingEngine(model, params, sharder,
-                           max_batch=args.max_batch, max_len=args.max_len,
-                           sampler=SamplerConfig(temperature=args.temperature),
-                           seed=args.seed,
-                           truncate_prompts=args.truncate_prompts,
-                           sync_every=args.sync_every, policy=args.policy,
-                           preempt=args.preempt,
-                           bucketed_prefill=not args.no_bucketed_prefill,
-                           overlap_prefill=not args.no_overlap_prefill)
+    sharder = make_sharder(cfg, None, plan.shard_mode)
+    engine = ServingEngine.from_plan(plan, params, model=model,
+                                     sharder=sharder, seed=args.seed)
 
     if args.arrival == "batch":
         rng = np.random.default_rng(args.seed)
@@ -165,11 +310,9 @@ def main() -> None:
         assert all(r.done for r in reqs)
         return
 
-    items = wl.make_workload(
-        args.arrival, rate=args.rate, duration=args.duration, seed=args.seed,
-        vocab_size=cfg.vocab_size, max_new_tokens=(args.max_new, args.max_new),
-        prompt_dist=args.prompt_dist, deadline_slack=args.deadline_slack,
-        deadline_frac=args.deadline_frac, trace_path=args.trace_file)
+    profile = _workload_profile(args)
+    items = wl.profile_items(profile, vocab_size=cfg.vocab_size,
+                             seed=args.seed)
     # declared span for generated workloads; a trace only knows its arrivals
     span = None if args.arrival == "trace" else args.duration
     shown = span if span is not None else max((it.t for it in items),
@@ -200,14 +343,14 @@ def main() -> None:
     s = engine.stats()
     print(f"hot path: {s['host_syncs']} host syncs / {s['ticks']} ticks "
           f"({s['host_syncs'] / max(1, s['ticks']):.2f}/tick, "
-          f"sync_every={args.sync_every}), "
+          f"sync_every={engine.sync_every}), "
           f"{s['prefill_calls']} prefill calls over "
           f"{s['prefill_compiles']} compiled shapes, "
           f"{s['instant_admits']} instant admits")
-    if s["preemptions"]:
+    if s["preemptions"] or s["shed"]:
         print(f"scheduler: {s['preemptions']} preemptions / "
               f"{s['resumes']} resumes, {s['evicted_tokens']} tokens "
-              f"evicted to host")
+              f"evicted to host, {s['shed']} requests shed at submit")
     if args.clock == "wall":
         print(f"wall: {dt:.2f}s, {agg['tokens'] / dt:.1f} tok/s measured")
 

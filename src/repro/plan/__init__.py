@@ -1,0 +1,31 @@
+"""Plan-centric serving API: one object per design point.
+
+``ServingPlan`` captures every serving design parameter (capacity, bucket
+set, hot-path chunking, scheduling policy, sampling, sharding mode,
+per-kernel tile plans); ``WorkloadProfile`` captures the workload it is
+tuned for; ``planner.autotune`` searches the plan space per (arch,
+workload) the way the paper's DSE searches tile geometry per problem
+size.  ``io`` round-trips plans through JSON for the CLI (`--plan`) and
+the committed BENCH trajectory files.
+
+`planner` is imported lazily (it drags in jax and the model stack);
+``from repro.plan import planner`` when you need it.
+"""
+
+from repro.plan.io import (  # noqa: F401
+    PLAN_SCHEMA,
+    from_dict,
+    load_plan,
+    save_plan,
+    to_dict,
+)
+from repro.plan.plan import (  # noqa: F401
+    MIN_BUCKET,
+    ServingPlan,
+    WorkloadProfile,
+    default_buckets,
+)
+
+__all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET",
+           "default_buckets", "PLAN_SCHEMA", "to_dict", "from_dict",
+           "save_plan", "load_plan"]

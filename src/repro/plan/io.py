@@ -1,0 +1,88 @@
+"""Plan (de)serialization: JSON round-trips + the schema-drift guard.
+
+A :class:`~repro.plan.plan.ServingPlan` is designed to round-trip
+losslessly: ``from_dict(to_dict(plan)) == plan`` for every valid plan
+(the dataclass canonicalizes nested containers to JSON types at
+construction), and the committed BENCH files embed ``to_dict(resolve())``
+so any recorded cell can be re-served from its plan alone.
+
+``check_schema()`` is the CI guard (run by ``benchmarks/run.py --smoke``):
+it fails loudly when the JSON schema drifts from the dataclass fields, so
+a field added to one surface but not the other breaks the build instead
+of silently dropping design parameters from the trajectory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Mapping
+
+from repro.plan.plan import ServingPlan, WorkloadProfile
+
+PLAN_SCHEMA = "serving_plan/v1"
+
+
+def to_dict(plan: ServingPlan) -> Dict[str, object]:
+    """Plain-JSON dict of a plan, tagged with the schema id."""
+    d = dataclasses.asdict(plan)
+    if d["buckets"] is not None:
+        d["buckets"] = list(d["buckets"])
+    return {"schema": PLAN_SCHEMA, **d}
+
+
+def from_dict(d: Mapping[str, object]) -> ServingPlan:
+    """Inverse of :func:`to_dict`; tolerant of a missing schema tag (plan
+    dicts embedded in BENCH cells) but loud on a wrong one."""
+    d = dict(d)
+    schema = d.pop("schema", PLAN_SCHEMA)
+    if schema != PLAN_SCHEMA:
+        raise ValueError(f"unsupported plan schema {schema!r}; "
+                         f"this build reads {PLAN_SCHEMA!r}")
+    known = {f.name for f in dataclasses.fields(ServingPlan)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"unknown plan fields {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    # list -> tuple coercion happens in ServingPlan.__post_init__
+    return ServingPlan(**d)
+
+
+def save_plan(plan: ServingPlan, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(to_dict(plan), f, indent=1)
+        f.write("\n")
+
+
+def load_plan(path: str) -> ServingPlan:
+    with open(path) as f:
+        return from_dict(json.load(f)).validate()
+
+
+def check_schema() -> None:
+    """Fail loudly when the plan JSON schema and the dataclass fields
+    drift apart, or when a default plan stops round-tripping exactly."""
+    fields = {f.name for f in dataclasses.fields(ServingPlan)}
+    probe = ServingPlan(arch="rwkv6-1.6b",
+                        buckets=(8, 16, 63), max_len=64,
+                        tile_plans={"rwkv": {"bh": 64}},
+                        provenance={"source": "schema-probe"}).validate()
+    d = to_dict(probe)
+    keys = set(d) - {"schema"}
+    if keys != fields:
+        raise RuntimeError(
+            f"plan JSON schema drifted from the ServingPlan dataclass: "
+            f"json-only={sorted(keys - fields)} "
+            f"dataclass-only={sorted(fields - keys)}")
+    rt = from_dict(json.loads(json.dumps(d)))
+    if rt != probe:
+        raise RuntimeError("ServingPlan no longer round-trips through "
+                           "JSON byte-exactly; fix plan.io coercions")
+    wp = WorkloadProfile(heavy_decode=(0.03, 32, 48))
+    if WorkloadProfile.from_json(json.loads(json.dumps(wp.to_json()))) != wp:
+        raise RuntimeError("WorkloadProfile no longer round-trips through "
+                           "JSON; fix plan.io coercions")
+
+
+__all__ = ["PLAN_SCHEMA", "to_dict", "from_dict", "save_plan", "load_plan",
+           "check_schema"]

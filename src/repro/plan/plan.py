@@ -1,0 +1,272 @@
+"""`ServingPlan`: every serving design parameter behind one frozen object.
+
+The paper's central claim is that a spatial accelerator stays efficient
+across problem sizes because the design parameters (tiling, unrolling,
+residency) live behind a general abstraction that a per-problem-size
+search can optimize — `repro.core.dse` already does this at the kernel
+level (`Plan`, `search`, `best_plan`).  The serving layer had grown the
+opposite way: the same ~10 knobs (max_batch, bucket set, sync_every,
+policy, preemption, overlap, sampler, sharding mode) threaded by hand
+through `ServingEngine.__init__`, 20+ `launch/serve.py` flags, and the
+benchmark's `ServingLoadCell`.  This module promotes the design-space
+idea to the whole serving stack:
+
+* :class:`ServingPlan` — a frozen, JSON-serializable dataclass that is
+  the *single source of truth* for every serving design parameter.  The
+  engine is constructed from it (`ServingEngine.from_plan`), the CLI
+  loads/saves it (`--plan` / `--save-plan`), and every committed BENCH
+  cell embeds the resolved plan dict so the perf trajectory records
+  *which* design point produced each number.
+* :class:`WorkloadProfile` — the workload half of a serving cell (arrival
+  process, prompt/decode length distributions, deadlines): the "problem
+  size" the planner searches against.
+* :func:`repro.plan.planner.autotune` — the serving-level analogue of
+  `core.dse.best_plan`: searches (bucket set x sync_every x max_batch x
+  policy) against the `repro.hw` cost model plus a short virtual-clock
+  probe run and returns the best plan per (arch, workload).
+
+Defaults resolve to the engine's historical behavior exactly: a default
+plan produces a bit-identical schedule to the pre-plan engine, which is
+what keeps the committed ``BENCH_serving.json`` metrics blocks stable.
+
+This module is dependency-light on purpose (stdlib only): it is imported
+by ``repro.configs`` (cells embed plans) and ``repro.serving.engine``
+without dragging jax or the model stack in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+MIN_BUCKET = 8   # smallest prefill length bucket (pow2 upward, cap max_len-1)
+
+
+def default_buckets(max_len: int) -> Tuple[int, ...]:
+    """The historical pow2 bucket set: MIN_BUCKET doubling up to, and
+    capped at, ``max_len - 1`` (the engine's prefill compile ceiling)."""
+    limit = max_len - 1
+    out: List[int] = []
+    b = MIN_BUCKET
+    while b < limit:
+        out.append(b)
+        b *= 2
+    out.append(limit)
+    return tuple(out)
+
+
+def _jsonify(x):
+    """Canonicalize nested containers to plain JSON types so a plan that
+    round-trips through JSON compares equal to the original."""
+    if isinstance(x, Mapping):
+        return {str(k): _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if isinstance(x, bool) or x is None or isinstance(x, (int, float, str)):
+        return x
+    return str(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """The workload side of a serving cell: what arrives, how long it is,
+    and what SLO it carries.  A pure description — materialize it with
+    :func:`repro.serving.workload.profile_items` (seeded, deterministic).
+
+    ``duration=None`` means "caller decides" (the benchmark sweep's fast /
+    full switch); every other field mirrors the corresponding
+    :func:`repro.serving.workload.make_workload` argument.
+    """
+
+    kind: str = "poisson"                    # workload.ARRIVAL_KINDS
+    rate: float = 0.5                        # requests per clock unit
+    duration: Optional[float] = None         # span in clock units
+    prompt_len: Tuple[int, int] = (4, 12)
+    max_new_tokens: Tuple[int, int] = (8, 16)
+    prompt_dist: str = "uniform"             # workload.PROMPT_DISTS
+    prompt_len_long: Optional[int] = None    # long-tail cap
+    heavy_decode: Optional[Tuple[float, int, int]] = None
+    deadline_slack: Optional[float] = None   # decode-proportional SLO
+    deadline_frac: float = 1.0
+    burst_factor: float = 4.0                # mmpp only
+    dwell: Tuple[float, float] = (16.0, 4.0)  # mmpp only
+    trace_path: Optional[str] = None         # kind == "trace"
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt_len", tuple(self.prompt_len))
+        object.__setattr__(self, "max_new_tokens",
+                           tuple(self.max_new_tokens))
+        object.__setattr__(self, "dwell", tuple(self.dwell))
+        if self.heavy_decode is not None:
+            f, lo, hi = self.heavy_decode
+            object.__setattr__(self, "heavy_decode",
+                               (float(f), int(lo), int(hi)))
+
+    @property
+    def has_deadlines(self) -> bool:
+        return self.deadline_slack is not None and self.deadline_frac > 0
+
+    def mean_decode(self) -> float:
+        """Expected decode length per request (slot-occupancy ticks on the
+        virtual clock) — the planner's service-time estimate."""
+        lo, hi = self.max_new_tokens
+        mean = (lo + hi) / 2.0
+        if self.heavy_decode is not None:
+            f, hlo, hhi = self.heavy_decode
+            mean = (1 - f) * mean + f * (hlo + hhi) / 2.0
+        return mean
+
+    def to_json(self) -> Dict[str, object]:
+        return _jsonify(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(d: Mapping[str, object]) -> "WorkloadProfile":
+        # list -> tuple coercion happens in __post_init__
+        return WorkloadProfile(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """One serving design point: everything the stack needs to decide *how*
+    to serve, in one frozen, JSON-round-trippable object.
+
+    Field groups, in order:
+
+    * model identity — ``arch`` (the ``repro.configs`` id), ``reduced``
+      (CPU-sized config), ``shard_mode`` (the ``repro.dist`` rules key);
+    * capacity — ``max_batch`` decode slots over a ``max_len`` cache;
+    * admission — ``bucketed_prefill`` plus the explicit ``buckets`` set
+      (``None`` = the historical pow2 set, see :func:`default_buckets`);
+    * decode hot path — ``sync_every`` on-device ticks per host sync,
+      ``overlap_prefill`` admission/decode overlap;
+    * scheduling — ``policy`` (scheduler-registry key), ``preempt``,
+      ``shed_late`` (deadline-aware admission control: reject provably-
+      late requests at submit);
+    * sampling — ``temperature`` / ``top_k``
+      (= :class:`repro.serving.sampler.SamplerConfig`);
+    * ``tile_plans`` — per-kernel tile plans: one embedded
+      ``core.dse.Plan`` dict per recurrent layer kind, scored at this
+      plan's ``max_batch`` (the kernel-level half of the design point);
+    * ``provenance`` — where the plan came from (CLI overrides, autotune
+      search record); never affects behavior, always recorded.
+    """
+
+    # --- model identity --------------------------------------------------
+    arch: str
+    reduced: bool = True
+    shard_mode: str = "decode"
+    # --- capacity --------------------------------------------------------
+    max_batch: int = 4
+    max_len: int = 128
+    # --- admission -------------------------------------------------------
+    bucketed_prefill: bool = True
+    buckets: Optional[Tuple[int, ...]] = None
+    # --- decode hot path -------------------------------------------------
+    sync_every: int = 1
+    overlap_prefill: bool = True
+    # --- scheduling ------------------------------------------------------
+    policy: str = "fcfs"
+    preempt: bool = False
+    shed_late: bool = False
+    # --- sampling --------------------------------------------------------
+    temperature: float = 0.0
+    top_k: int = 0
+    # --- misc engine behavior -------------------------------------------
+    truncate_prompts: bool = False
+    # --- per-kernel tile plans + provenance ------------------------------
+    tile_plans: Mapping[str, Mapping[str, object]] = dataclasses.field(
+        default_factory=dict)
+    provenance: Mapping[str, object] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        if self.buckets is not None:
+            object.__setattr__(self, "buckets",
+                               tuple(int(b) for b in self.buckets))
+        object.__setattr__(self, "tile_plans", _jsonify(self.tile_plans))
+        object.__setattr__(self, "provenance", _jsonify(self.provenance))
+
+    # ------------------------------------------------------------ validation
+    def validate(self) -> "ServingPlan":
+        """Structural validation; raises ``ValueError`` on the first
+        problem, returns ``self`` so construction can chain.  Policy names
+        are checked against the live scheduler registry so a plan can
+        never name a policy the engine does not implement."""
+        if not self.arch or not isinstance(self.arch, str):
+            raise ValueError(f"plan.arch must be a non-empty string, "
+                             f"got {self.arch!r}")
+        if self.max_batch < 1:
+            raise ValueError(f"plan.max_batch must be >= 1, "
+                             f"got {self.max_batch}")
+        if self.max_len < 2:
+            raise ValueError(f"plan.max_len must be >= 2 (one prompt token "
+                             f"+ one generated), got {self.max_len}")
+        if self.sync_every < 1:
+            raise ValueError(f"plan.sync_every must be >= 1, "
+                             f"got {self.sync_every}")
+        if self.temperature < 0:
+            raise ValueError(f"plan.temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"plan.top_k must be >= 0, got {self.top_k}")
+        from repro.serving.scheduler import SCHEDULERS, make_scheduler
+        if self.policy not in SCHEDULERS:
+            raise ValueError(f"plan.policy {self.policy!r} is not in the "
+                             f"scheduler registry {sorted(SCHEDULERS)}")
+        make_scheduler(self.policy, preempt=self.preempt)  # preempt support
+        if self.buckets is not None:
+            bs = self.buckets
+            if not bs:
+                raise ValueError("plan.buckets must be non-empty or None")
+            if list(bs) != sorted(set(bs)):
+                raise ValueError(f"plan.buckets must be strictly "
+                                 f"increasing, got {bs}")
+            if bs[0] < 1:
+                raise ValueError(f"plan.buckets must be >= 1, got {bs}")
+            if bs[-1] != self.max_len - 1:
+                raise ValueError(
+                    f"plan.buckets must end at max_len-1 = "
+                    f"{self.max_len - 1} so every admissible prompt has a "
+                    f"bucket, got {bs}")
+        return self
+
+    # ------------------------------------------------------------ resolution
+    def resolved_buckets(self) -> Tuple[int, ...]:
+        """The explicit bucket set this plan serves with (the pow2 default
+        when ``buckets`` is None).  In non-bucketed mode prefill pads to
+        the exact prompt length; the returned set is then only the
+        compile-ceiling bound of bucketed mode."""
+        if self.buckets is not None:
+            return self.buckets
+        return default_buckets(self.max_len)
+
+    def resolve(self) -> "ServingPlan":
+        """A copy with every defaulted design choice made explicit
+        (currently: the bucket set) — what the BENCH files embed, so a
+        committed cell is re-runnable without knowing the defaults of the
+        code that produced it."""
+        if not self.bucketed_prefill or self.buckets is not None:
+            return self
+        return dataclasses.replace(self, buckets=self.resolved_buckets())
+
+    def summary(self) -> str:
+        """One-line human identity for CLI banners and logs."""
+        b = ("exact" if not self.bucketed_prefill
+             else "pow2" if self.buckets is None
+             else ",".join(map(str, self.buckets)))
+        bits = [self.arch + ("(reduced)" if self.reduced else ""),
+                f"b{self.max_batch}", f"len{self.max_len}",
+                f"sync{self.sync_every}",
+                self.policy + ("+p" if self.preempt else ""),
+                f"buckets={b}"]
+        if self.shed_late:
+            bits.append("shed")
+        if not self.overlap_prefill:
+            bits.append("no-overlap")
+        if self.temperature > 0:
+            bits.append(f"T={self.temperature:g}")
+        return " ".join(bits)
+
+
+__all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET",
+           "default_buckets"]

@@ -1,0 +1,335 @@
+"""Serving-level design-space search: `autotune(arch, workload, hw_spec)`.
+
+The serving analogue of :func:`repro.core.dse.best_plan`.  The kernel DSE
+searches tile geometry per problem size against an analytic latency
+model; this planner searches the *serving* design space
+
+    bucket set x sync_every x max_batch x (policy, preempt)
+
+per (architecture, workload profile) against two complementary oracles:
+
+* the **roofline cost model** (`repro.hw.HardwareSpec`) scores the
+  dimensions the deterministic virtual clock cannot see — host-sync
+  amortization (``sync_every``), prefill padding waste and compile count
+  (bucket set), and HBM feasibility of the slot count (weights + cache
+  must fit, estimated from the *full-size* config's param/cache specs
+  even when the probe runs reduced);
+* a short seeded **virtual-clock probe run** scores the dimensions the
+  cost model cannot see — queueing: for each feasible (max_batch,
+  policy, preempt) candidate the workload is replayed through a real
+  engine and ranked by (SLO attainment, p95 TTFT, p95 queue-wait,
+  tokens/tick).
+
+Everything is deterministic for a fixed (hw_spec, seed): the probe uses
+the virtual clock and seeded workloads, candidate enumeration order is
+fixed, and ties break toward the earlier candidate — so `autotune` is a
+pure function, and the winning plan's ``provenance`` records the search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import hw
+from repro.plan.plan import (
+    MIN_BUCKET,
+    ServingPlan,
+    WorkloadProfile,
+    default_buckets,
+)
+
+log = logging.getLogger("repro.plan")
+
+# cost-model constants: one blocking host<->device round-trip, and one XLA
+# prefill compile (amortized over the workload's admissions).  Order of
+# magnitude only — they steer *relative* choices, never absolute claims.
+HOST_SYNC_S = 50e-6
+COMPILE_S = 2.0
+HBM_FRACTION = 0.9        # usable HBM after runtime/fragmentation slack
+SYNC_GAIN_MIN = 0.01      # keep growing the chunk while gain >= 1%
+
+# recurrent layer kinds that map onto the paper's RNN-cell tile search
+_RECURRENT_KINDS = ("rwkv", "swa_ssm")
+
+
+# ---------------------------------------------------------------------------
+# Memory + per-tick cost model (full-size config: the deployment target)
+# ---------------------------------------------------------------------------
+
+
+def _spec_bytes(specs) -> int:
+    import jax
+
+    from repro.models.params import is_spec
+
+    return int(sum(
+        s.size * np.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(specs, is_leaf=is_spec) if is_spec(s)))
+
+
+@functools.lru_cache(maxsize=None)
+def _full_model(arch: str):
+    """The full-size (deployment-target) model wrapper — cached: the cost
+    model consults it once per max_batch candidate plus per bucket-set
+    candidate within a single autotune call."""
+    from repro.configs import get_config
+    from repro.models.lm import build_model
+
+    return build_model(get_config(arch))
+
+
+@functools.lru_cache(maxsize=None)
+def serving_memory_bytes(arch: str, max_batch: int,
+                         max_len: int) -> Tuple[int, int]:
+    """(weight_bytes, cache_bytes) of the *full-size* config at the given
+    slot count — from the parameter/cache spec trees, no allocation."""
+    model = _full_model(arch)
+    weights = _spec_bytes(model.param_specs())
+    cache = _spec_bytes(model.cache_specs(max_batch, max_len))
+    return weights, cache
+
+
+@functools.lru_cache(maxsize=None)
+def _full_param_count(arch: str) -> int:
+    import jax
+
+    from repro.models.params import is_spec
+
+    specs = _full_model(arch).param_specs()
+    return int(sum(s.size for s in jax.tree.leaves(specs, is_leaf=is_spec)
+                   if is_spec(s)))
+
+
+def modeled_tick_seconds(arch: str, max_batch: int,
+                         spec: hw.HardwareSpec) -> float:
+    """Roofline cost of one batched decode tick on the target chip: a
+    decode step touches every weight once (the paper's compute:memory
+    argument — small-batch decode is weight-streaming-bound) and does
+    ~2 FLOPs per (param, slot)."""
+    n_params = _full_param_count(arch)
+    weight_bytes = 2 * n_params  # bf16 deployment weights
+    t_compute = spec.matmul_time(2.0 * n_params * max_batch)
+    t_stream = spec.hbm_time(weight_bytes)
+    return max(t_compute, t_stream)
+
+
+def pick_sync_every(arch: str, max_batch: int, spec: hw.HardwareSpec,
+                    candidates: Sequence[int], preempt: bool) -> int:
+    """Largest chunk whose modeled throughput still gains >= 1% over the
+    previous candidate.  Preemptive plans pin ``sync_every=1``: eviction
+    happens at host syncs, so a victim would wait out the whole chunk
+    (in-chunk preemption is a ROADMAP item, not a current mechanism)."""
+    if preempt:
+        return 1
+    t_tick = modeled_tick_seconds(arch, max_batch, spec)
+    cands = sorted(set(int(c) for c in candidates))
+    best = cands[0]
+    best_thr = 1.0 / (t_tick + HOST_SYNC_S / best)
+    for c in cands[1:]:
+        thr = 1.0 / (t_tick + HOST_SYNC_S / c)
+        if thr < best_thr * (1.0 + SYNC_GAIN_MIN):
+            break
+        best, best_thr = c, thr
+    return best
+
+
+def _pad_bucket(n: int, limit: int) -> int:
+    return min(limit, -(-n // MIN_BUCKET) * MIN_BUCKET)
+
+
+def candidate_bucket_sets(prompt_lengths: Sequence[int], max_len: int
+                          ) -> List[Optional[Tuple[int, ...]]]:
+    """Bucket-set candidates: the historical pow2 default plus a quantile
+    set fitted to the workload's observed prompt lengths (p50/p90/max,
+    padded to MIN_BUCKET granularity, always ending at max_len-1)."""
+    limit = max_len - 1
+    out: List[Optional[Tuple[int, ...]]] = [None]
+    if prompt_lengths:
+        ls = sorted(prompt_lengths)
+        qs = {ls[min(len(ls) - 1, math.ceil(q * len(ls)) - 1)]
+              for q in (0.5, 0.9, 1.0)}
+        fitted = tuple(sorted({_pad_bucket(q, limit) for q in qs} | {limit}))
+        if fitted != default_buckets(max_len):
+            out.append(fitted)
+    return out
+
+
+def bucket_set_cost(buckets: Optional[Tuple[int, ...]],
+                    prompt_lengths: Sequence[int], max_len: int,
+                    arch: str, spec: hw.HardwareSpec) -> float:
+    """Modeled prefill seconds per admitted request: padded-token compute
+    plus the XLA compile bill amortized over the workload's admissions."""
+    bs = buckets if buckets is not None else default_buckets(max_len)
+    limit = max_len - 1
+
+    def pad(n: int) -> int:
+        for b in bs:
+            if b >= n:
+                return b
+        return bs[-1]
+
+    n_params = _full_param_count(arch)
+    t_tok = spec.matmul_time(2.0 * n_params)
+    mean_padded = (sum(pad(min(n, limit)) for n in prompt_lengths)
+                   / max(1, len(prompt_lengths)))
+    return mean_padded * t_tok + COMPILE_S * len(bs) / max(
+        1, len(prompt_lengths))
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel tile plans
+# ---------------------------------------------------------------------------
+
+
+def tile_plans_for(arch: str, max_batch: int,
+                   spec: hw.HardwareSpec) -> Dict[str, Dict[str, object]]:
+    """Embed a ``core.dse`` tile plan per recurrent layer kind, scored at
+    the serving batch (the kernel-level half of the design point).  The
+    recurrent core is modeled as the paper's 3-gate cell at the model
+    width; attention-only architectures carry no tile plans."""
+    from repro.core import dse
+    from repro.core.cells import RNNCellConfig
+
+    cfg = _full_model(arch).cfg
+    out: Dict[str, Dict[str, object]] = {}
+    for kind in sorted(set(cfg.layer_pattern)):
+        if kind not in _RECURRENT_KINDS:
+            continue
+        cell = RNNCellConfig("gru", hidden=cfg.d_model, features=cfg.d_model,
+                             batch=1, precision="bf16")
+        best = dse.best_plan(cell, spec, max_batch=max_batch)
+        out[kind] = dataclasses.asdict(best)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The probe + search
+# ---------------------------------------------------------------------------
+
+
+def _probe_metrics(plan: ServingPlan, model, params, sharder,
+                   items, seed: int) -> Dict[str, object]:
+    from repro.serving import metrics as smetrics
+    from repro.serving.engine import ServingEngine
+    from repro.serving.workload import drive
+
+    engine = ServingEngine.from_plan(plan, params, model=model,
+                                     sharder=sharder, seed=seed)
+    reqs = drive(engine, items)
+    return smetrics.aggregate(reqs, ticks=engine.ticks,
+                              util_history=engine.util_history)
+
+
+def _score(agg: Dict[str, object]) -> Tuple[float, float, float, float]:
+    """Rank key, larger is better: (SLO attainment, -p95 TTFT,
+    -p95 queue-wait, tokens/tick).  NaN percentiles (nothing completed)
+    rank worst."""
+
+    def neg(x: float) -> float:
+        return -1e18 if (x is None or math.isnan(x)) else -float(x)
+
+    slo = agg.get("slo", {}).get("attainment", 0.0)
+    return (float(slo), neg(agg["ttft"]["p95"]),
+            neg(agg["queue_wait"]["p95"]), float(agg["tokens_per_sec"]))
+
+
+def autotune(arch: str, workload: WorkloadProfile,
+             hw_spec: hw.HardwareSpec = hw.DEFAULT, *,
+             seed: int = 0, reduced: bool = True, max_len: int = 64,
+             max_batches: Sequence[int] = (2, 4, 8),
+             sync_everys: Sequence[int] = (1, 2, 4, 8),
+             probe_duration: float = 32.0) -> ServingPlan:
+    """Search the serving design space for one (arch, workload) cell.
+
+    Returns the winning validated :class:`ServingPlan` with the search
+    recorded under ``provenance["autotune"]``.  Deterministic for a fixed
+    (hw_spec, seed): same inputs, same plan.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.dist.sharding import make_sharder
+    from repro.models.lm import build_model
+    from repro.serving.workload import profile_items
+    from repro.testing import reduced_config
+
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sharder = make_sharder(cfg, None, "decode")
+
+    span = workload.duration if workload.duration is not None \
+        else probe_duration
+    # probe on a capped span: replace the profile's own duration, because
+    # profile_items prefers it over the duration argument
+    probe_span = min(span, probe_duration)
+    probe_wl = dataclasses.replace(workload, duration=probe_span)
+    items = profile_items(probe_wl, vocab_size=cfg.vocab_size, seed=seed)
+    deadlines = any(it.deadline is not None for it in items)
+
+    # --- candidate slot counts: HBM feasibility on the full-size config
+    budget = hw_spec.hbm_bytes * HBM_FRACTION
+    feasible, overcommitted = [], False
+    for mb in sorted(set(int(b) for b in max_batches)):
+        weights, cache = serving_memory_bytes(arch, mb, max_len)
+        if weights + cache <= budget:
+            feasible.append(mb)
+    if not feasible:   # weights alone exceed one chip: rank anyway, flag it
+        overcommitted = True
+        feasible = sorted(set(int(b) for b in max_batches))
+
+    policies = ([("fcfs", False), ("edf", False), ("edf", True)]
+                if deadlines else [("fcfs", False), ("spf", False)])
+
+    # --- probe: queueing behavior per (max_batch, policy) on the virtual
+    # clock (sync_every / buckets do not move virtual-clock schedules, so
+    # one probe per scheduling candidate covers the whole plane)
+    best_key, best, probed = None, None, []
+    for mb in feasible:
+        for policy, preempt in policies:
+            cand = ServingPlan(arch=arch, reduced=reduced, max_len=max_len,
+                               max_batch=mb, policy=policy, preempt=preempt)
+            agg = _probe_metrics(cand, model, params, sharder, items, seed)
+            key = _score(agg)
+            probed.append({"max_batch": mb, "policy": policy,
+                           "preempt": preempt, "score": list(key)})
+            log.debug("probe b%d %s%s -> %s", mb, policy,
+                      "+p" if preempt else "", key)
+            if best_key is None or key > best_key:
+                best_key, best = key, cand
+
+    # --- cost-model dimensions the virtual clock cannot see
+    sync = pick_sync_every(arch, best.max_batch, hw_spec, sync_everys,
+                           best.preempt)
+    lengths = [len(it.prompt) for it in items]
+    bsets = candidate_bucket_sets(lengths, max_len)
+    costs = [bucket_set_cost(bs, lengths, max_len, arch, hw_spec)
+             for bs in bsets]
+    buckets = bsets[int(np.argmin(costs))]
+
+    plan = dataclasses.replace(
+        best, sync_every=sync, buckets=buckets,
+        tile_plans=tile_plans_for(arch, best.max_batch, hw_spec),
+        provenance={"autotune": {
+            "hw": hw_spec.name, "seed": seed,
+            "probe_duration": probe_span,
+            "workload": workload.to_json(),
+            "memory_overcommitted": overcommitted,
+            "probes": probed,
+            "best_score": list(best_key),
+            "bucket_costs": [
+                {"buckets": None if b is None else list(b), "cost_s": c}
+                for b, c in zip(bsets, costs)],
+        }})
+    return plan.validate()
+
+
+__all__ = ["autotune", "serving_memory_bytes", "modeled_tick_seconds",
+           "pick_sync_every", "candidate_bucket_sets", "bucket_set_cost",
+           "tile_plans_for", "HOST_SYNC_S", "COMPILE_S"]

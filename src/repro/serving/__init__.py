@@ -26,5 +26,7 @@ from repro.serving.workload import (  # noqa: F401
     drive,
     load_trace,
     make_workload,
+    profile_items,
     save_trace,
 )
+from repro.plan.plan import ServingPlan, WorkloadProfile  # noqa: F401

@@ -16,7 +16,12 @@ The engine is mechanism only; the serving stack is three explicit layers:
   bit-exactly into any free slot (preempt → resume);
 * this module owns *execution* — ``step()`` asks the scheduler, moves
   state through the slot manager, runs the prefill / fused-decode
-  programs, and reports telemetry.
+  programs, and reports telemetry;
+* :mod:`repro.plan` owns the *design point* — every constructor knob
+  (capacity, bucket set, chunking, policy, sampling) lives in one frozen
+  :class:`~repro.plan.ServingPlan`; build engines with
+  :meth:`ServingEngine.from_plan` (the kwargs constructor is a shim that
+  assembles a plan internally and behaves identically).
 
 The steady-state hot path is the paper's thesis applied at the host level:
 breaking the serving loop into per-kernel launches (decode, then a host
@@ -68,13 +73,12 @@ import numpy as np
 
 from repro.dist.sharding import Sharder
 from repro.models.lm import LM
+from repro.plan.plan import MIN_BUCKET, ServingPlan
 from repro.serving.sampler import SamplerConfig, split_and_sample
 from repro.serving.scheduler import POLICIES, Scheduler, make_scheduler
 from repro.serving.slotstate import SlotManager, SlotSnapshot
 
 log = logging.getLogger("repro.serving")
-
-MIN_BUCKET = 8   # smallest prefill length bucket (pow2 upward, cap max_len-1)
 
 
 @dataclasses.dataclass
@@ -87,6 +91,8 @@ class Request:
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    shed: bool = False            # rejected at submit: provably past its
+    #                               deadline (plan.shed_late admission ctl)
     truncated: bool = False       # prompt tail dropped (truncate_prompts)
     capped: bool = False          # cache can't hold max_new_tokens: the
     #                               output will stop short (length cut)
@@ -101,6 +107,19 @@ class Request:
     t_resumes: List[int] = dataclasses.field(default_factory=list)
     saved: Optional[SlotSnapshot] = dataclasses.field(
         default=None, repr=False)   # host state while evicted
+
+
+def _is_reduced(cfg) -> bool:
+    """Best-effort identity check for the kwargs shim: a config that
+    differs from the registry entry of its own name is a reduced (or
+    otherwise customized) variant.  Unknown names count as reduced —
+    the flag only matters when ``from_plan`` has to rebuild the model."""
+    try:
+        from repro.configs import ARCHS
+
+        return ARCHS.get(cfg.name) != cfg
+    except Exception:  # pragma: no cover - configs import should not fail
+        return True
 
 
 @dataclasses.dataclass
@@ -166,28 +185,51 @@ def _decode_many(model: LM, sharder: Sharder, sampler: SamplerConfig,
 
 
 class ServingEngine:
+    """Plan-driven construction: every design parameter lives in one
+    :class:`repro.plan.ServingPlan` (``engine.plan``) — build with
+    :meth:`from_plan`.  The historical kwargs constructor is kept as a
+    thin shim that assembles a plan internally, so ``ServingEngine(model,
+    params, sharder, max_batch=..., ...)`` keeps working with a
+    bit-identical schedule to the equivalent ``from_plan`` engine."""
+
     def __init__(self, model: LM, params, sharder: Sharder, *,
                  max_batch: int = 4, max_len: int = 128,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
                  truncate_prompts: bool = False, sync_every: int = 1,
                  policy: str = "fcfs", preempt: bool = False,
                  bucketed_prefill: bool = True,
-                 overlap_prefill: bool = True):
-        if sync_every < 1:
-            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+                 overlap_prefill: bool = True,
+                 shed_late: bool = False,
+                 plan: Optional[ServingPlan] = None):
+        if plan is None:   # kwargs shim: capture the knobs as a plan
+            plan = ServingPlan(
+                arch=model.cfg.name, reduced=_is_reduced(model.cfg),
+                max_batch=max_batch, max_len=max_len,
+                sync_every=sync_every, policy=policy, preempt=preempt,
+                bucketed_prefill=bucketed_prefill,
+                overlap_prefill=overlap_prefill, shed_late=shed_late,
+                temperature=sampler.temperature, top_k=sampler.top_k,
+                truncate_prompts=truncate_prompts,
+                provenance={"source": "engine-kwargs"})
+        plan.validate()
+        self.plan = plan
         self.model = model
         self.params = params
         self.sharder = sharder
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.sampler = sampler
-        self.truncate_prompts = truncate_prompts
-        self.sync_every = int(sync_every)
-        self.policy = policy
-        self.scheduler: Scheduler = make_scheduler(policy, preempt=preempt)
-        self.bucketed_prefill = bucketed_prefill
-        self.overlap_prefill = overlap_prefill
-        self.sm = SlotManager(model, max_batch, max_len)
+        self.max_batch = plan.max_batch
+        self.max_len = plan.max_len
+        self.sampler = SamplerConfig(temperature=plan.temperature,
+                                     top_k=plan.top_k)
+        self.truncate_prompts = plan.truncate_prompts
+        self.sync_every = int(plan.sync_every)
+        self.policy = plan.policy
+        self.scheduler: Scheduler = make_scheduler(plan.policy,
+                                                   preempt=plan.preempt)
+        self.bucketed_prefill = plan.bucketed_prefill
+        self.overlap_prefill = plan.overlap_prefill
+        self.shed_late = plan.shed_late
+        self._buckets = plan.resolved_buckets()
+        self.sm = SlotManager(model, self.max_batch, self.max_len)
         self.completed = 0        # requests finished since construction
         self.total_tokens = 0     # tokens generated (prefill + decode)
         self.finished: List[Request] = []   # completed Requests, in order
@@ -200,16 +242,44 @@ class ServingEngine:
         self.preemptions = 0      # slots evicted to host
         self.resumes = 0          # evicted requests restored to a slot
         self.evicted_tokens = 0   # tokens already generated at eviction
+        self.shed = 0             # requests rejected at submit (admission
+        #                           control: provably past their deadline)
         self._pending: List[_PendingAdmit] = []  # overlapped admissions
         self._tick = 0
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
         self._decode_many = jax.jit(
-            partial(_decode_many, model, sharder, sampler, max_len,
-                    self.sync_every),
+            partial(_decode_many, model, sharder, self.sampler,
+                    self.max_len, self.sync_every),
             donate_argnums=1)
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, sharder, max_len=max_len))
+            lambda p, b: model.prefill(p, b, sharder,
+                                       max_len=self.max_len))
+
+    @classmethod
+    def from_plan(cls, plan: ServingPlan, params, *,
+                  model: Optional[LM] = None,
+                  sharder: Optional[Sharder] = None,
+                  seed: int = 0) -> "ServingEngine":
+        """Build an engine from a :class:`repro.plan.ServingPlan` — the
+        plan-centric constructor.  ``model``/``sharder`` default to what
+        the plan's identity fields describe (``arch`` + ``reduced`` +
+        ``shard_mode``); pass them explicitly to reuse an already-built
+        model (the benchmark sweeps do)."""
+        plan.validate()
+        if model is None:
+            from repro.configs import get_config
+            from repro.models.lm import build_model
+            from repro.testing import reduced_config
+
+            cfg = (reduced_config(plan.arch) if plan.reduced
+                   else get_config(plan.arch))
+            model = build_model(cfg)
+        if sharder is None:
+            from repro.dist.sharding import make_sharder
+
+            sharder = make_sharder(model.cfg, None, plan.shard_mode)
+        return cls(model, params, sharder, seed=seed, plan=plan)
 
     # ------------------------------------------------- back-compat accessors
     @property
@@ -260,8 +330,41 @@ class ServingEngine:
                         "for a %d-token prompt (max_len=%d); output stops "
                         "at %d tokens", req.uid, max_new_tokens,
                         len(prompt), self.max_len, cap)
+        if (self.shed_late and deadline is not None
+                and self._provably_late(req)):
+            # deadline-aware admission control: reject work that cannot
+            # meet its SLO even if admitted this very tick, instead of
+            # spending slot-ticks on a guaranteed violation
+            req.shed = True
+            self.shed += 1
+            log.debug("shed req %d at tick %d: deadline %.1f < earliest "
+                      "completion", req.uid, self._tick, deadline)
+            return req
         self.scheduler.submit(req)
         return req
+
+    def _provably_late(self, req: Request) -> bool:
+        """True when the request cannot meet its deadline even with a slot
+        granted *now*: earliest completion is the prefill tick plus the
+        remaining decode ticks.  The bound is strictly conservative — a
+        request with an ``eos_id`` could retire at its prefill token, so
+        only the prefill tick counts; without one the output length is
+        exactly ``max_new_tokens`` (or the cache cap, whichever is
+        smaller).  Completion-by-deadline uses the SLO convention
+        ``t_done + 1 <= deadline``.
+
+        The bound equates one engine tick with one deadline clock unit —
+        exact on the virtual clock (the benchmark/SLO convention, where
+        deadlines are tick-denominated by construction).  Under
+        ``--clock wall`` ticks run at the hardware's pace, so the bound
+        is a heuristic there, not a proof."""
+        if req.eos_id is not None:
+            min_decode = 0      # could instant-EOS at the prefill token
+        else:
+            cap = max(2, self.max_len - len(req.prompt))
+            min_decode = min(req.max_new_tokens, cap) - 1
+        earliest_end = self._tick + 1 + min_decode
+        return req.deadline < earliest_end
 
     def has_work(self) -> bool:
         """True while any request is queued or occupying a slot."""
@@ -274,25 +377,21 @@ class ServingEngine:
 
     # ------------------------------------------------------------- buckets
     def bucket(self, n: int) -> int:
-        """Padded prefill length for an n-token prompt."""
+        """Padded prefill length for an n-token prompt: the smallest
+        bucket that fits it.  The bucket set comes from the plan
+        (``plan.buckets``, defaulting to the historical pow2 set)."""
         if not self.bucketed_prefill:
             return n
-        b = MIN_BUCKET
-        while b < n:
-            b *= 2
-        return min(b, self.max_len - 1)
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return self._buckets[-1]
 
     @property
     def bucket_lengths(self) -> List[int]:
         """All bucket lengths this engine can emit (= its prefill compile
         ceiling in bucketed mode)."""
-        limit = self.max_len - 1
-        out, b = [], MIN_BUCKET
-        while b < limit:
-            out.append(b)
-            b *= 2
-        out.append(limit)
-        return out
+        return list(self._buckets)
 
     # ----------------------------------------------------------------- ticks
     def step(self, max_ticks: Optional[int] = None) -> bool:
@@ -378,39 +477,55 @@ class ServingEngine:
 
     # ----------------------------------------------------------- scheduling
     def preempt(self, slot: int) -> Request:
-        """Evict the request in ``slot`` to host memory and requeue it.
+        """Evict the request in ``slot`` to host memory and requeue it
+        (see :meth:`preempt_many` — this is the one-victim case).  Public
+        for manual load shedding and the round-trip tests."""
+        return self.preempt_many([slot])[0]
 
-        One blocking ``device_get`` gathers the slot's full cache column
-        (see SlotManager.snapshot); once the scheduler grants it a slot
-        again the request resumes bit-exactly under greedy decoding (with
-        stochastic sampling the engine-global key stream makes resumed
-        tokens slot/tick-dependent — see slotstate's module docstring).
-        Called automatically by preemptive policies (EDF ``--preempt``);
-        public for manual load shedding and the round-trip tests."""
-        req = self.sm.slots[slot]
-        if req is None:
-            raise ValueError(f"slot {slot} is empty")
-        req.saved = self.sm.snapshot(slot)
+    def preempt_many(self, slots: List[int]) -> List[Request]:
+        """Evict N running requests to host memory and requeue them, in
+        ``slots`` order, with ONE batched device->host transfer.
+
+        ``SlotManager.snapshot_many`` gathers every victim's cache column
+        in a single ``gather_slots`` + ``device_get`` instead of N
+        sequential snapshots, so a preemption burst (EDF under an arrival
+        spike) costs one host sync, not one per victim.  Bookkeeping is
+        per-victim and order-preserving — ``requeue_front`` runs in
+        ``slots`` order exactly as N sequential :meth:`preempt` calls
+        would, so the schedule is bit-identical to the sequential path.
+        Once the scheduler grants a victim a slot again it resumes
+        bit-exactly under greedy decoding (with stochastic sampling the
+        engine-global key stream makes resumed tokens slot/tick-dependent
+        — see slotstate's module docstring)."""
+        reqs: List[Request] = []
+        for slot in slots:
+            if self.sm.slots[slot] is None:
+                raise ValueError(f"slot {slot} is empty")
+            reqs.append(self.sm.slots[slot])
+        snaps = self.sm.snapshot_many(slots)
         self.host_syncs += 1
-        req.n_preempts += 1
-        req.t_preempts.append(self._tick)
-        self.preemptions += 1
-        self.evicted_tokens += len(req.output)
-        self.sm.release(slot)
-        self.scheduler.requeue_front(req)
-        log.debug("preempted req %d from slot %d at tick %d "
-                  "(%d tokens evicted to host)", req.uid, slot, self._tick,
-                  len(req.output))
-        return req
+        for slot, req, snap in zip(slots, reqs, snaps):
+            req.saved = snap
+            req.n_preempts += 1
+            req.t_preempts.append(self._tick)
+            self.preemptions += 1
+            self.evicted_tokens += len(req.output)
+            self.sm.release(slot)
+            self.scheduler.requeue_front(req)
+            log.debug("preempted req %d from slot %d at tick %d "
+                      "(%d tokens evicted to host)", req.uid, slot,
+                      self._tick, len(req.output))
+        return reqs
 
     def _schedule(self) -> int:
         """One scheduler consultation: preempt (if the policy does), then
         admit queued requests into free slots.  Returns how many admits
         finished at their prefill token."""
         if self.scheduler.preemptive and len(self.scheduler):
-            for slot in self.scheduler.victims(self.sm.running(),
-                                               len(self.sm.free())):
-                self.preempt(slot)
+            victims = self.scheduler.victims(self.sm.running(),
+                                             len(self.sm.free()))
+            if victims:
+                self.preempt_many(victims)
         return self._admit()
 
     def _admit(self) -> int:
@@ -543,6 +658,7 @@ class ServingEngine:
         self.preemptions = 0
         self.resumes = 0
         self.evicted_tokens = 0
+        self.shed = 0
         self._tick = 0
 
     def stats(self) -> Dict[str, float]:
@@ -562,6 +678,7 @@ class ServingEngine:
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "evicted_tokens": self.evicted_tokens,
+            "shed": self.shed,
         }
 
 

@@ -121,6 +121,13 @@ def aggregate(reqs: Sequence[Request], *, ticks: int,
             "violations": len(with_dl) - met,
             "attainment": met / len(with_dl),
         }
+        # admission control (plan.shed_late): requests rejected at submit
+        # as provably late.  They count as violations above (never done);
+        # the key appears only when shedding actually happened, so every
+        # pre-shedding slo block stays byte-identical.
+        n_shed = sum(1 for r in with_dl if getattr(r, "shed", False))
+        if n_shed:
+            out["slo"]["shed"] = n_shed
     n_preempts = sum(r.n_preempts for r in reqs)
     if n_preempts:
         out["preemption"] = {
@@ -167,9 +174,10 @@ def format_summary(agg: Dict[str, object]) -> str:
     ]
     if "slo" in agg:
         s = agg["slo"]
+        shed = f", {s['shed']} shed at submit" if "shed" in s else ""
         lines.append(f"  slo        {s['met']}/{s['n']} met "
                      f"({s['attainment']:.1%} attainment, "
-                     f"{s['violations']} violations)")
+                     f"{s['violations']} violations{shed})")
     if "preemption" in agg:
         p = agg["preemption"]
         lines.append(f"  preempt    {p['preemptions']} evictions / "

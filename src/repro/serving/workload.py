@@ -32,6 +32,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.plan.plan import WorkloadProfile
 from repro.serving.engine import Request, ServingEngine
 
 ARRIVAL_KINDS = ("poisson", "mmpp", "trace")
@@ -234,6 +235,31 @@ def make_workload(kind: str, *, rate: float, duration: float, seed: int,
                       heavy_decode=heavy_decode,
                       deadline_slack=deadline_slack,
                       deadline_frac=deadline_frac)
+
+
+def profile_items(profile: "WorkloadProfile", *, vocab_size: int, seed: int,
+                  duration: Optional[float] = None) -> List[WorkloadItem]:
+    """Materialize a :class:`repro.plan.WorkloadProfile` into arrival
+    items — the declarative half of a serving cell turned into the exact
+    seeded draw sequence :func:`make_workload` has always produced, so a
+    profile with historical field values replays historical workloads
+    byte-for-byte.  ``duration`` fills in a profile whose own duration is
+    None (the benchmark's fast/full switch)."""
+    span = profile.duration if profile.duration is not None else duration
+    if span is None and profile.kind != "trace":
+        raise ValueError("workload profile has no duration and none was "
+                         "provided")
+    return make_workload(
+        profile.kind, rate=profile.rate, duration=span, seed=seed,
+        vocab_size=vocab_size, prompt_len=profile.prompt_len,
+        max_new_tokens=profile.max_new_tokens,
+        burst_factor=profile.burst_factor, dwell=profile.dwell,
+        prompt_dist=profile.prompt_dist,
+        prompt_len_long=profile.prompt_len_long,
+        heavy_decode=profile.heavy_decode,
+        deadline_slack=profile.deadline_slack,
+        deadline_frac=profile.deadline_frac,
+        trace_path=profile.trace_path)
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,34 @@ def test_smoke_registry_guard_detects_drift(monkeypatch):
         sl._check_policy_registry()
 
 
+def test_committed_cells_embed_plans_and_auto_beats_default():
+    """Plan-centric acceptance: every committed BENCH cell embeds a
+    valid *resolved* plan dict, and the autotuned overload cell beats the
+    hand-picked default design point on the same workload."""
+    import json
+    from pathlib import Path
+
+    from repro.plan import io as plan_io
+
+    doc = json.loads((Path(__file__).resolve().parent.parent /
+                      "BENCH_serving.json").read_text())
+    for c in doc["cells"]:
+        plan = plan_io.from_dict(c["plan"])
+        plan.validate()
+        assert plan.buckets is not None        # resolved, not defaulted
+        assert plan.arch == c["arch"]
+        assert plan.max_batch == c["max_batch"]
+    auto = [c for c in doc["cells"] if c["name"].endswith("/auto")]
+    assert auto, "the sweep must record the autotuned overload cell"
+    fcfs = next(c for c in doc["cells"]
+                if c["name"] == "rwkv6-1.6b/b4/r0.8/heavy")
+    for c in auto:
+        assert c["plan"]["provenance"]["autotune"]["probes"]
+        assert c["metrics"]["ttft"]["p95"] < fcfs["metrics"]["ttft"]["p95"]
+        assert (c["metrics"]["slo"]["attainment"]
+                > fcfs["metrics"]["slo"]["attainment"])
+
+
 @pytest.mark.slow
 def test_cell_metrics_identical_across_runs():
     """The acceptance contract: two same-seed virtual-clock runs of a cell
