@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, Iterator, List, Optional, Sequence
 
@@ -42,7 +43,7 @@ from benchmarks.common import Row
 from repro.configs import SERVING_LOAD_SWEEP, ServingLoadCell, get_config
 from repro.dist.sharding import make_sharder
 from repro.models.lm import build_model
-from repro.plan import io as plan_io
+from repro.plan import WorkloadProfile, io as plan_io
 from repro.serving import ServingEngine, drive, profile_items
 from repro.serving import metrics as smetrics
 from repro.testing import reduced_config
@@ -77,7 +78,7 @@ def _calibrate_tick_seconds(engine: ServingEngine, vocab_size: int,
 
 
 def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
-             reduced: bool = True,
+             reduced: bool = True, trace_dir: Optional[str] = None,
              _built=None) -> Dict[str, object]:
     """One sweep cell: build (or reuse) the model, serve the cell's
     workload profile under the cell's *plan* on a virtual clock, return
@@ -88,7 +89,13 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
     can be re-served from its recorded plan alone — see
     benchmarks/README.md).  Cells with non-default scheduling dimensions
     additionally report a deterministic ``sched`` block; base-grid cells
-    emit the historical document shape plus the ``plan`` key."""
+    emit the historical document shape plus the ``plan`` key.
+
+    ``trace_dir`` archives a per-cell structured event trace
+    (``repro.obs.Tracer``, Chrome trace_event JSON, Perfetto-viewable)
+    under ``<trace_dir>/<cell name with / -> _>.trace.json`` — the
+    virtual clock makes the files byte-stable per seed, so they can be
+    diffed like the ``metrics`` blocks."""
     import dataclasses
 
     cfg, model, params = _built or _build(cell.arch, reduced)
@@ -97,8 +104,14 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
     plan = cell.plan if cell.plan.reduced == reduced else \
         dataclasses.replace(cell.plan, reduced=reduced)
     sharder = make_sharder(cfg, None, plan.shard_mode)
+    tracer = None
+    if trace_dir is not None:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     engine = ServingEngine.from_plan(plan, params, model=model,
-                                     sharder=sharder, seed=seed)
+                                     sharder=sharder, seed=seed,
+                                     tracer=tracer)
     duration = cell.duration if cell.duration is not None else duration
     items = profile_items(cell.workload, vocab_size=cfg.vocab_size,
                           seed=seed, duration=duration)
@@ -107,6 +120,12 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
     wall_s = time.perf_counter() - t0
     agg = smetrics.aggregate(reqs, ticks=engine.ticks,
                              util_history=engine.util_history)
+    if tracer is not None:
+        # archive before tick calibration, which replays extra requests
+        # that are no part of the cell's workload
+        os.makedirs(trace_dir, exist_ok=True)
+        tracer.save(os.path.join(
+            trace_dir, cell.name.replace("/", "_") + ".trace.json"))
     # wall-calibrated tick cost (engine is warm after the drive), mapping
     # the deterministic tick-domain latencies above to milliseconds
     tick_s = _calibrate_tick_seconds(engine, cfg.vocab_size, seed)
@@ -162,16 +181,82 @@ def autotuned_overload_cell(seed: int = 0) -> ServingLoadCell:
                            workload=base.workload, tag="auto")
 
 
+# The drifting-workload scenario (observed-traffic re-autotune): a plan
+# tuned on calm, *deadline-free* traffic keeps serving after the traffic
+# drifts to a heavier, deadline-carrying, heavy-tailed mix.  Calm
+# traffic is sparse enough (~1 request per 33 ticks, mean decode ~8
+# ticks) that requests almost never overlap, so every batch size probes
+# identically and the autotuner keeps the cheapest feasible design
+# point: 2 slots.  The drifted mix offers ~8.3 slot-ticks/tick — 4x the
+# stale capacity — so the stale plan queues unboundedly and misses most
+# deadlines, while the replan sees the real rate, the heavy decode
+# tail, and the deadlines in the trace, and re-provisions (8 slots,
+# deadline-aware policy probed).
+_DRIFT_ARCH = "rwkv6-1.6b"
+_DRIFT_CALM = WorkloadProfile(
+    kind="poisson", rate=0.03, duration=96.0,
+    prompt_len=ServingLoadCell.PROMPT_LEN,
+    max_new_tokens=ServingLoadCell.MAX_NEW,
+    prompt_len_long=ServingLoadCell.MAX_LEN - 1)
+_DRIFT_WORKLOAD = WorkloadProfile(
+    kind="poisson", rate=0.9, duration=96.0,
+    prompt_len=ServingLoadCell.PROMPT_LEN,
+    max_new_tokens=ServingLoadCell.MAX_NEW,
+    prompt_len_long=ServingLoadCell.MAX_LEN - 1,
+    heavy_decode=(0.05, 24, 40), deadline_slack=3.0)
+
+
+def drifting_workload_cells(seed: int = 0) -> List[ServingLoadCell]:
+    """The observability acceptance scenario: two cells serving the same
+    drifted workload, under (a) the *stale* plan — autotuned for the calm
+    pre-drift profile — and (b) the *replanned* design point, autotuned
+    from a structured trace recorded while the stale plan served the
+    drifted traffic (``planner.autotune_from_trace``).  The replan sees
+    the real arrival rate, the heavy decode tail, and the deadlines the
+    stale declaration never mentioned, so it beats the stale plan on SLO
+    attainment (asserted in tests/test_serving_load.py).  Deterministic
+    for a fixed seed, like every other cell."""
+    from repro.obs import Tracer
+    from repro.plan import planner
+
+    stale = planner.autotune(_DRIFT_ARCH, _DRIFT_CALM, seed=seed,
+                             max_len=ServingLoadCell.MAX_LEN)
+    # record the drifted traffic under the stale plan (the "production"
+    # run an operator would have a trace of)
+    cfg, model, params = _build(_DRIFT_ARCH, reduced=True)
+    sharder = make_sharder(cfg, None, stale.shard_mode)
+    tracer = Tracer()
+    engine = ServingEngine.from_plan(stale, params, model=model,
+                                     sharder=sharder, seed=seed,
+                                     tracer=tracer)
+    items = profile_items(_DRIFT_WORKLOAD, vocab_size=cfg.vocab_size,
+                          seed=seed)
+    drive(engine, items)
+    replan = planner.autotune_from_trace(
+        _DRIFT_ARCH, tracer, seed=seed, max_len=ServingLoadCell.MAX_LEN,
+        duration=_DRIFT_WORKLOAD.duration)   # the known recording window
+    return [
+        ServingLoadCell(family="rwkv", plan=stale,
+                        workload=_DRIFT_WORKLOAD, tag="drift-stale"),
+        ServingLoadCell(family="rwkv", plan=replan,
+                        workload=_DRIFT_WORKLOAD, tag="drift-replan"),
+    ]
+
+
 def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
           cells: Optional[Sequence[ServingLoadCell]] = None,
           duration: Optional[float] = None,
-          autotune: bool = False) -> Dict[str, object]:
+          autotune: bool = False,
+          trace_dir: Optional[str] = None) -> Dict[str, object]:
     """The full sweep -> the BENCH_serving.json document.  With
     ``autotune=True`` (the real, BENCH-writing runs) the overload
-    scenario additionally gets its autotuned cell appended."""
+    scenario additionally gets its autotuned cell appended, plus the
+    drifting-workload pair (stale plan vs replan-from-observed-trace).
+    ``trace_dir`` archives one trace file per cell."""
     cells = list(cells if cells is not None else SERVING_LOAD_SWEEP)
     if autotune:
         cells.append(autotuned_overload_cell(seed))
+        cells.extend(drifting_workload_cells(seed))
     duration = duration if duration is not None else (32.0 if fast else 256.0)
     built: Dict[str, tuple] = {}  # one model build per arch, many cells
     out_cells: List[Dict[str, object]] = []
@@ -179,7 +264,8 @@ def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
         if cell.arch not in built:
             built[cell.arch] = _build(cell.arch, reduced)
         out_cells.append(run_cell(cell, duration=duration, seed=seed,
-                                  reduced=reduced, _built=built[cell.arch]))
+                                  reduced=reduced, trace_dir=trace_dir,
+                                  _built=built[cell.arch]))
     return {
         "schema": SCHEMA,
         "seed": seed,
@@ -253,17 +339,54 @@ def _check_plan_surface() -> None:
         raise RuntimeError("autotune returned a malformed plan")
 
 
+def _check_trace_schema() -> None:
+    """CI guard for the observability subsystem: serve a tiny workload
+    with a tracer attached, twice with the same seed, and require (a) the
+    exported documents to be byte-identical — the determinism contract
+    that makes trace files diffable artifacts — (b) the schema validator
+    to accept them, and (c) ``fit_profile`` to read a workload profile
+    back out.  Loud in tier-1, so the trace schema, the engine's hook
+    points, and the observed-traffic fit can never silently drift."""
+    from repro.obs import Tracer, check_trace, fit_profile
+
+    tiny = WorkloadProfile(kind="poisson", rate=0.5, duration=8.0,
+                           deadline_slack=3.0)
+    cfg, model, params = _build("rwkv6-1.6b", reduced=True)
+    sharder = make_sharder(cfg, None, "decode")
+
+    def one_run() -> Tracer:
+        tracer = Tracer()
+        engine = ServingEngine(model, params, sharder, max_batch=2,
+                               max_len=32, tracer=tracer)
+        drive(engine, profile_items(tiny, vocab_size=cfg.vocab_size,
+                                    seed=0))
+        return tracer
+
+    a, b = one_run(), one_run()
+    if a.dumps() != b.dumps():
+        raise RuntimeError("same-seed virtual-clock runs emitted "
+                           "different trace bytes; repro.obs.trace has "
+                           "lost determinism")
+    check_trace(a.to_chrome())   # raises ValueError on schema drift
+    prof = fit_profile(a, duration=tiny.duration)
+    if not (0 < prof.rate < 10 and prof.prompt_len[0] >= 1):
+        raise RuntimeError(f"fit_profile returned an implausible profile "
+                           f"from the smoke trace: {prof}")
+
+
 def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
     """benchmarks.run harness entry: emit one CSV row per cell and refresh
     BENCH_serving.json in the working directory.  ``smoke`` runs one tiny
     base cell plus the overload scenario (every policy in it, preemption
-    included), checks the plan JSON schema, and autotunes one tiny cell —
-    and does NOT touch BENCH_serving.json; it proves the scripts, the
-    scheduler registry, and the plan subsystem still work (the tier-1 CI
-    guard)."""
+    included), checks the plan JSON schema, validates the trace schema +
+    byte-determinism, and autotunes one tiny cell — and does NOT touch
+    BENCH_serving.json; it proves the scripts, the scheduler registry,
+    the plan subsystem, and the observability layer still work (the
+    tier-1 CI guard)."""
     if smoke:
         _check_policy_registry()
         _check_plan_surface()
+        _check_trace_schema()
         base = [c for c in SERVING_LOAD_SWEEP
                 if c.family == "rwkv" and c.max_batch == 2
                 and c.policy == "fcfs" and c.prompt_dist == "uniform"
@@ -300,12 +423,17 @@ def main() -> None:
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--full-size", action="store_true",
                     help="full-size configs (default: reduced, CPU-friendly)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="archive one Perfetto-viewable trace file per "
+                         "cell (repro.obs structured event traces; "
+                         "byte-stable per seed)")
     args = ap.parse_args()
     # both BENCH-writing entries (this and benchmarks.run) include the
     # autotuned overload cell, so the committed document shape is the same
     # whichever path regenerated it
     doc = sweep(fast=not args.full, seed=args.seed,
-                reduced=not args.full_size, autotune=True)
+                reduced=not args.full_size, autotune=True,
+                trace_dir=args.trace_dir)
     write(doc, args.out)
     print(f"wrote {args.out}: {len(doc['cells'])} cells, "
           f"families={doc['families']}")

@@ -42,6 +42,14 @@ this stays true.  ``--deadline-slack S`` stamps every generated request
 with the absolute deadline ``arrival + S * max_new`` clock units, and
 ``--shed-late`` turns on deadline-aware admission control (reject
 provably-late requests at submit).
+
+Observability (``repro.obs``): ``--trace-out trace.json`` records a
+structured event trace — request lifecycle spans and engine events on
+the virtual clock — as Chrome ``trace_event`` JSON, viewable at
+https://ui.perfetto.dev; ``--live-metrics [N]`` prints a rolling
+p95-TTFT/TPOT/SLO/utilization line over the last N ticks while serving.
+A recorded trace feeds ``WorkloadProfile.from_trace`` /
+``planner.autotune_from_trace`` to replan from observed traffic.
 """
 
 from __future__ import annotations
@@ -182,6 +190,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="warn + drop the tail of prompts longer than "
                          "max_len-1 instead of rejecting them (useful when "
                          "replaying traces recorded on a larger engine)")
+    # observability (repro.obs)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a structured event trace (request "
+                         "lifecycle spans + engine events on the virtual "
+                         "clock) and write Chrome trace_event JSON here — "
+                         "open it at https://ui.perfetto.dev; same-seed "
+                         "virtual-clock runs write byte-identical files")
+    ap.add_argument("--live-metrics", type=int, nargs="?", const=32,
+                    default=None, metavar="N",
+                    help="print a rolling serving line (p95 TTFT/TPOT, "
+                         "SLO attainment, utilization over the last N "
+                         "ticks) every N engine ticks (default N=32)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="DEBUG logging: per-tick engine utilization lines")
     return ap
@@ -288,8 +308,22 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     sharder = make_sharder(cfg, None, plan.shard_mode)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     engine = ServingEngine.from_plan(plan, params, model=model,
-                                     sharder=sharder, seed=args.seed)
+                                     sharder=sharder, seed=args.seed,
+                                     tracer=tracer)
+    live = (engine.enable_live_metrics(args.live_metrics)
+            if args.live_metrics else None)
+
+    def _save_trace() -> None:
+        if tracer is not None:
+            tracer.save(args.trace_out)
+            print(f"wrote {len(tracer)} trace events to {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
 
     if args.arrival == "batch":
         rng = np.random.default_rng(args.seed)
@@ -308,6 +342,9 @@ def main() -> None:
         for r in reqs[:3]:
             print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} -> {r.output[:8]}")
         assert all(r.done for r in reqs)
+        if live is not None:
+            print(live.line())
+        _save_trace()
         return
 
     profile = _workload_profile(args)
@@ -329,8 +366,17 @@ def main() -> None:
         engine.run()
         engine.reset_telemetry()
     clock = wl.WallClock() if args.clock == "wall" else wl.VirtualClock()
+    on_tick = None
+    if live is not None:
+        period = args.live_metrics
+        last_print = [0]
+
+        def on_tick(tick: int) -> None:
+            if tick - last_print[0] >= period:
+                last_print[0] = tick
+                print(live.line())
     t0 = time.time()
-    reqs = wl.drive(engine, items, clock)
+    reqs = wl.drive(engine, items, clock, on_tick=on_tick)
     dt = time.time() - t0
     # per-tick cost from busy time only: at low rates most of dt is idle
     # sleep between arrivals, which must not inflate the latency scaling
@@ -353,6 +399,7 @@ def main() -> None:
               f"evicted to host, {s['shed']} requests shed at submit")
     if args.clock == "wall":
         print(f"wall: {dt:.2f}s, {agg['tokens'] / dt:.1f} tok/s measured")
+    _save_trace()
 
 
 if __name__ == "__main__":

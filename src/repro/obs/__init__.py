@@ -1,0 +1,32 @@
+"""`repro.obs`: observability for the serving stack.
+
+Three layers, each usable on its own:
+
+* :mod:`repro.obs.registry` — a typed counters/gauges/histograms registry
+  (:class:`MetricsRegistry`) that owns every serving-stack counter, plus
+  :class:`LiveMetrics`, a rolling window over the last N engine ticks
+  (p95 TTFT/TPOT, SLO attainment, utilization) for live monitoring;
+* :mod:`repro.obs.trace` — :class:`Tracer`, a structured event tracer on
+  the deterministic virtual clock: per-request lifecycle spans
+  (submit→admit→first-token→done, preempt/resume/shed) and per-tick
+  engine events (decode chunk, prefill call + bucket, host sync,
+  compile), exportable as Chrome ``trace_event`` JSON viewable in
+  Perfetto — byte-identical across same-seed virtual-clock runs;
+* :mod:`repro.obs.observe` — :func:`fit_profile`, which fits a
+  :class:`repro.plan.WorkloadProfile` (arrival rate, prompt/decode
+  length distributions, deadline slack) from a recorded trace, so
+  :func:`repro.plan.planner.autotune` can replan from *observed*
+  traffic instead of a synthetic probe
+  (surfaced as ``WorkloadProfile.from_trace`` and
+  ``planner.autotune_from_trace``).
+"""
+
+from repro.obs.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    LiveMetrics,
+    MetricsRegistry,
+)
+from repro.obs.trace import TraceEvent, Tracer, check_trace  # noqa: F401
+from repro.obs.observe import fit_profile  # noqa: F401

@@ -124,6 +124,18 @@ class WorkloadProfile:
         # list -> tuple coercion happens in __post_init__
         return WorkloadProfile(**dict(d))
 
+    @staticmethod
+    def from_trace(trace, *, kind: str = "poisson",
+                   duration: Optional[float] = None) -> "WorkloadProfile":
+        """Fit a profile from *observed* traffic: a recorded
+        :class:`repro.obs.Tracer` (live object, exported Chrome-trace
+        document, or file path).  See :func:`repro.obs.observe.fit_profile`
+        for the estimators; ``autotune(WorkloadProfile.from_trace(t))``
+        replans from what actually arrived instead of what was declared."""
+        from repro.obs.observe import fit_profile
+
+        return fit_profile(trace, kind=kind, duration=duration)
+
 
 @dataclasses.dataclass(frozen=True)
 class ServingPlan:

@@ -330,6 +330,34 @@ def autotune(arch: str, workload: WorkloadProfile,
     return plan.validate()
 
 
-__all__ = ["autotune", "serving_memory_bytes", "modeled_tick_seconds",
-           "pick_sync_every", "candidate_bucket_sets", "bucket_set_cost",
+def autotune_from_trace(arch: str, trace,
+                        hw_spec: hw.HardwareSpec = hw.DEFAULT, *,
+                        duration: Optional[float] = None,
+                        **kwargs) -> ServingPlan:
+    """Re-autotune from *observed* traffic: fit a
+    :class:`WorkloadProfile` from a recorded :class:`repro.obs.Tracer`
+    trace (live object, Chrome-trace document, or file path) and search
+    the design space against it.  This is the drift-recovery loop — when
+    traffic no longer matches the profile a deployed plan was tuned on,
+    replan from what actually arrived instead of the stale declaration.
+
+    Accepts every :func:`autotune` keyword; the fit's inputs and result
+    are recorded under ``provenance["observed_traffic"]`` alongside the
+    usual ``provenance["autotune"]`` search record.
+    """
+    from repro.obs.observe import fit_profile, summarize
+
+    profile = fit_profile(trace, duration=duration)
+    plan = autotune(arch, profile, hw_spec, **kwargs)
+    prov = dict(plan.provenance)
+    prov["observed_traffic"] = {
+        "fitted_profile": profile.to_json(),
+        "trace_summary": summarize(trace),
+    }
+    return dataclasses.replace(plan, provenance=prov)
+
+
+__all__ = ["autotune", "autotune_from_trace", "serving_memory_bytes",
+           "modeled_tick_seconds", "pick_sync_every",
+           "candidate_bucket_sets", "bucket_set_cost",
            "tile_plans_for", "HOST_SYNC_S", "COMPILE_S"]

@@ -73,6 +73,8 @@ import numpy as np
 
 from repro.dist.sharding import Sharder
 from repro.models.lm import LM
+from repro.obs.registry import LiveMetrics, MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.plan.plan import MIN_BUCKET, ServingPlan
 from repro.serving.sampler import SamplerConfig, split_and_sample
 from repro.serving.scheduler import POLICIES, Scheduler, make_scheduler
@@ -200,7 +202,8 @@ class ServingEngine:
                  bucketed_prefill: bool = True,
                  overlap_prefill: bool = True,
                  shed_late: bool = False,
-                 plan: Optional[ServingPlan] = None):
+                 plan: Optional[ServingPlan] = None,
+                 tracer: Optional[Tracer] = None):
         if plan is None:   # kwargs shim: capture the knobs as a plan
             plan = ServingPlan(
                 arch=model.cfg.name, reduced=_is_reduced(model.cfg),
@@ -223,27 +226,46 @@ class ServingEngine:
         self.truncate_prompts = plan.truncate_prompts
         self.sync_every = int(plan.sync_every)
         self.policy = plan.policy
-        self.scheduler: Scheduler = make_scheduler(plan.policy,
-                                                   preempt=plan.preempt)
         self.bucketed_prefill = plan.bucketed_prefill
         self.overlap_prefill = plan.overlap_prefill
         self.shed_late = plan.shed_late
         self._buckets = plan.resolved_buckets()
-        self.sm = SlotManager(model, self.max_batch, self.max_len)
-        self.completed = 0        # requests finished since construction
-        self.total_tokens = 0     # tokens generated (prefill + decode)
+        # one registry for the whole stack: scheduler + slot-state counters
+        # register into it, so reset_telemetry() covers them by construction
+        self.metrics = MetricsRegistry()
+        self.scheduler: Scheduler = make_scheduler(
+            plan.policy, preempt=plan.preempt, registry=self.metrics)
+        self.sm = SlotManager(model, self.max_batch, self.max_len,
+                              registry=self.metrics)
+        c = self.metrics.counter
+        self._c_completed = c("engine.completed",
+                              "requests finished since construction")
+        self._c_total_tokens = c("engine.total_tokens",
+                                 "tokens generated (prefill + decode)")
+        self._c_instant_admits = c("engine.instant_admits",
+                                   "requests done at their prefill token")
+        self._c_host_syncs = c("engine.host_syncs",
+                               "blocking device->host readbacks")
+        self._c_decode_chunks = c("engine.decode_chunks",
+                                  "fused decode_many launches")
+        self._c_prefill_calls = c("engine.prefill_calls",
+                                  "prefill program launches")
+        self._c_preemptions = c("engine.preemptions",
+                                "slots evicted to host")
+        self._c_resumes = c("engine.resumes",
+                            "evicted requests restored to a slot")
+        self._c_evicted_tokens = c("engine.evicted_tokens",
+                                   "tokens already generated at eviction")
+        self._c_shed = c("engine.shed",
+                         "requests rejected at submit (admission control)")
+        self.metrics.gauge("engine.ticks", "virtual-clock tick counter",
+                           fn=lambda: float(self._tick))
         self.finished: List[Request] = []   # completed Requests, in order
         self.util_history: List[float] = []  # per-tick (active+instant)/max
-        self.instant_admits = 0   # requests done at their prefill token
-        self.host_syncs = 0       # blocking device->host readbacks
-        self.decode_chunks = 0    # fused decode_many launches
-        self.prefill_calls = 0    # prefill program launches
         self.prefill_shapes: Set[Tuple[int, int]] = set()  # (rows, S) seen
-        self.preemptions = 0      # slots evicted to host
-        self.resumes = 0          # evicted requests restored to a slot
-        self.evicted_tokens = 0   # tokens already generated at eviction
-        self.shed = 0             # requests rejected at submit (admission
-        #                           control: provably past their deadline)
+        self.tracer = tracer          # optional structured event tracer
+        self.live: Optional[LiveMetrics] = None   # enable_live_metrics()
+        self._decode_compile_traced = False  # decode program built once
         self._pending: List[_PendingAdmit] = []  # overlapped admissions
         self._tick = 0
         self._uid = itertools.count()
@@ -260,7 +282,8 @@ class ServingEngine:
     def from_plan(cls, plan: ServingPlan, params, *,
                   model: Optional[LM] = None,
                   sharder: Optional[Sharder] = None,
-                  seed: int = 0) -> "ServingEngine":
+                  seed: int = 0,
+                  tracer: Optional[Tracer] = None) -> "ServingEngine":
         """Build an engine from a :class:`repro.plan.ServingPlan` — the
         plan-centric constructor.  ``model``/``sharder`` default to what
         the plan's identity fields describe (``arch`` + ``reduced`` +
@@ -279,7 +302,8 @@ class ServingEngine:
             from repro.dist.sharding import make_sharder
 
             sharder = make_sharder(model.cfg, None, plan.shard_mode)
-        return cls(model, params, sharder, seed=seed, plan=plan)
+        return cls(model, params, sharder, seed=seed, plan=plan,
+                   tracer=tracer)
 
     # ------------------------------------------------- back-compat accessors
     @property
@@ -293,6 +317,56 @@ class ServingEngine:
     @property
     def queue(self):
         return self.scheduler.queue
+
+    # counters live in the registry; these read-only views keep the
+    # historical attribute names (engine.completed, engine.shed, ...)
+    @property
+    def completed(self) -> int:
+        return self._c_completed.value
+
+    @property
+    def total_tokens(self) -> int:
+        return self._c_total_tokens.value
+
+    @property
+    def instant_admits(self) -> int:
+        return self._c_instant_admits.value
+
+    @property
+    def host_syncs(self) -> int:
+        return self._c_host_syncs.value
+
+    @property
+    def decode_chunks(self) -> int:
+        return self._c_decode_chunks.value
+
+    @property
+    def prefill_calls(self) -> int:
+        return self._c_prefill_calls.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._c_preemptions.value
+
+    @property
+    def resumes(self) -> int:
+        return self._c_resumes.value
+
+    @property
+    def evicted_tokens(self) -> int:
+        return self._c_evicted_tokens.value
+
+    @property
+    def shed(self) -> int:
+        return self._c_shed.value
+
+    def enable_live_metrics(self, window: int = 64) -> LiveMetrics:
+        """Attach a rolling :class:`repro.obs.LiveMetrics` window (last
+        ``window`` ticks); the engine feeds it every tick and every
+        retired request.  Returns the window for polling (``snapshot()``
+        / ``line()``)."""
+        self.live = LiveMetrics(window)
+        return self.live
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -330,13 +404,22 @@ class ServingEngine:
                         "for a %d-token prompt (max_len=%d); output stops "
                         "at %d tokens", req.uid, max_new_tokens,
                         len(prompt), self.max_len, cap)
+        if self.tracer is not None:
+            # every submission is traced — shed traffic included, so
+            # obs.observe.fit_profile sees the *offered* load, not just
+            # what admission control let through
+            self.tracer.request_submit(req, self._tick)
         if (self.shed_late and deadline is not None
                 and self._provably_late(req)):
             # deadline-aware admission control: reject work that cannot
             # meet its SLO even if admitted this very tick, instead of
             # spending slot-ticks on a guaranteed violation
             req.shed = True
-            self.shed += 1
+            self._c_shed.inc()
+            if self.tracer is not None:
+                self.tracer.request_shed(req, self._tick)
+            if self.live is not None:
+                self.live.observe_request(req, self._tick)
             log.debug("shed req %d at tick %d: deadline %.1f < earliest "
                       "completion", req.uid, self._tick, deadline)
             return req
@@ -402,12 +485,15 @@ class ServingEngine:
         budget = self.sync_every if max_ticks is None \
             else max(1, min(int(max_ticks), self.sync_every))
         n_instant = self._schedule()
+        if self.tracer is not None:
+            self.tracer.counter(self._tick, "queue_depth",
+                                len(self.scheduler))
         active_idx = self.sm.occupied()
         if not active_idx:
             if n_instant:
                 # prefill-only tick: every admit finished at its first
                 # token.  Real work happened, so time still advances.
-                self.util_history.append(n_instant / self.max_batch)
+                self._observe_tick(self._tick, n_instant / self.max_batch)
                 self._tick += 1
                 return True
             return bool(len(self.scheduler))
@@ -415,24 +501,32 @@ class ServingEngine:
         # frees so admission happens at the same tick the per-tick loop
         # would have admitted at
         stop_on_free = bool(len(self.scheduler))
+        if self.tracer is not None and not self._decode_compile_traced:
+            # the fused decode program has fixed shapes: XLA builds it
+            # exactly once, on the first chunk launch
+            self.tracer.compile(self._tick, "decode", self.max_batch,
+                                self.sync_every)
+            self._decode_compile_traced = True
         tokens_in = self._merge_pending_tokens()
         n, self.sm.cache, self._key, toks, acts, dones = self._decode_many(
             self.params, self.sm.cache, tokens_in, self._key,
             self.sm.active, self.sm.eos, self.sm.remaining,
             np.int32(budget), np.bool_(stop_on_free))
-        self.decode_chunks += 1
+        self._c_decode_chunks.inc()
         # ---- the chunk's single blocking host<->device sync -------------
         # (overlapped admissions' first tokens ride home on the same pull)
         n, toks, acts, dones, firsts = jax.device_get(
             (n, toks, acts, dones, [p.first for p in self._pending]))
         n = int(n)
-        self.host_syncs += 1
+        self._c_host_syncs.inc()
         for p, fv in zip(self._pending, firsts):
             for req, row in zip(p.reqs, p.rows):
                 req.output.append(int(fv[row]))
-                self.total_tokens += 1
+                self._c_total_tokens.inc()
         self._pending = []
         base = self._tick
+        if self.tracer is not None:
+            self.tracer.decode_chunk(base, n, len(active_idx))
         for j in range(n):
             n_active = 0
             for i in active_idx:
@@ -441,13 +535,16 @@ class ServingEngine:
                     continue
                 n_active += 1
                 req.output.append(int(toks[j, i]))
-                self.total_tokens += 1
+                self._c_total_tokens.inc()
                 if dones[j, i]:
                     self._finish(req, base + j)
                     self.sm.release(i)
-            self.util_history.append(
+            self._observe_tick(
+                base + j,
                 (n_active + (n_instant if j == 0 else 0)) / self.max_batch)
         self._tick += n
+        if self.tracer is not None:
+            self.tracer.host_sync(self._tick)
         # refresh the host mirrors from the authoritative slot table
         self.sm.refresh_after_chunk(toks[n - 1])
         log.debug("chunk of %d ticks -> tick %d: util=%.2f queued=%d "
@@ -460,8 +557,22 @@ class ServingEngine:
     def _finish(self, req: Request, tick: int) -> None:
         req.done = True
         req.t_done = tick
-        self.completed += 1
+        self._c_completed.inc()
         self.finished.append(req)
+        if self.tracer is not None:
+            self.tracer.request_done(req, tick)
+        if self.live is not None:
+            self.live.observe_request(req, tick)
+
+    def _observe_tick(self, tick: int, util: float) -> None:
+        """One virtual-clock tick's utilization, fanned out to every
+        observer: the aggregate history, the rolling live window, and the
+        trace's counter track."""
+        self.util_history.append(util)
+        if self.live is not None:
+            self.live.observe_tick(tick, util)
+        if self.tracer is not None:
+            self.tracer.counter(tick, "util", util)
 
     def _merge_pending_tokens(self):
         """Decode-chunk input tokens: the host mirror, with overlapped
@@ -503,15 +614,20 @@ class ServingEngine:
                 raise ValueError(f"slot {slot} is empty")
             reqs.append(self.sm.slots[slot])
         snaps = self.sm.snapshot_many(slots)
-        self.host_syncs += 1
+        self._c_host_syncs.inc()
+        if self.tracer is not None:
+            self.tracer.host_sync(self._tick)
         for slot, req, snap in zip(slots, reqs, snaps):
             req.saved = snap
             req.n_preempts += 1
             req.t_preempts.append(self._tick)
-            self.preemptions += 1
-            self.evicted_tokens += len(req.output)
+            self._c_preemptions.inc()
+            self._c_evicted_tokens.inc(len(req.output))
             self.sm.release(slot)
             self.scheduler.requeue_front(req)
+            if self.tracer is not None:
+                self.tracer.request_preempt(req, self._tick, slot,
+                                            len(req.output))
             log.debug("preempted req %d from slot %d at tick %d "
                       "(%d tokens evicted to host)", req.uid, slot,
                       self._tick, len(req.output))
@@ -548,7 +664,9 @@ class ServingEngine:
                 self.sm.restore(slot, req.saved, req)
                 req.saved = None
                 req.t_resumes.append(self._tick)
-                self.resumes += 1
+                self._c_resumes.inc()
+                if self.tracer is not None:
+                    self.tracer.request_resume(req, self._tick, slot)
                 log.debug("resumed req %d into slot %d at tick %d",
                           req.uid, slot, self._tick)
             if not fresh:
@@ -594,8 +712,12 @@ class ServingEngine:
         if self.model.cfg.m_rope_sections:
             batch["positions"] = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32), (rows, 3, S))
+        if self.tracer is not None:
+            if (rows, S) not in self.prefill_shapes:
+                self.tracer.compile(self._tick, "prefill", rows, S)
+            self.tracer.prefill(self._tick, S, rows, len(reqs), overlap)
         cacheN, logitsN = self._prefill(self.params, batch)
-        self.prefill_calls += 1
+        self._c_prefill_calls.inc()
         self.prefill_shapes.add((rows, S))
         self._key, first = split_and_sample(self._key, logitsN, self.sampler)
         if overlap:
@@ -611,20 +733,22 @@ class ServingEngine:
                                                grant_slots, first))
             return 0
         first = np.asarray(first)
-        self.host_syncs += 1
+        self._c_host_syncs.inc()
+        if self.tracer is not None:
+            self.tracer.host_sync(self._tick)
         n_instant = 0
         grant_rows, grant_slots = [], []
         for r_i, req in enumerate(reqs):
             tok = int(first[r_i])
             req.output.append(tok)
-            self.total_tokens += 1
+            self._c_total_tokens.inc()
             req.t_admit = req.t_first = self._tick
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.output) >= req.max_new_tokens):
                 # done at the prefill token: never occupies a slot
                 self._finish(req, self._tick)
                 n_instant += 1
-                self.instant_admits += 1
+                self._c_instant_admits.inc()
                 continue
             slot = free.pop(0)
             self.sm.grant(slot, req, tok)
@@ -643,43 +767,52 @@ class ServingEngine:
         """Zero the counters/histories (e.g. after a jit warmup run, so
         wall-clock tick timings exclude compile).  The engine must be
         drained; queued or in-flight requests would get skewed stamps.
-        ``prefill_shapes`` survives: it mirrors the jit cache, which a
-        telemetry reset does not clear."""
+
+        ``metrics.reset()`` covers every registered counter — engine,
+        scheduler, and slot-state alike — by construction, so a counter
+        added anywhere in the stack can never leak warmup counts.  Two
+        things deliberately survive: ``prefill_shapes`` mirrors the jit
+        cache, which a telemetry reset does not clear (so the reported
+        ``prefill_compiles`` stays truthful about programs built), and an
+        attached tracer restarts empty at tick 0 (warmup events would
+        otherwise overlap the measured run's restarted clock)."""
         if self.has_work():
             raise RuntimeError("reset_telemetry() on a busy engine")
-        self.completed = 0
-        self.total_tokens = 0
+        self.metrics.reset()
         self.finished = []
         self.util_history = []
-        self.instant_admits = 0
-        self.host_syncs = 0
-        self.decode_chunks = 0
-        self.prefill_calls = 0
-        self.preemptions = 0
-        self.resumes = 0
-        self.evicted_tokens = 0
-        self.shed = 0
         self._tick = 0
+        if self.live is not None:
+            self.live.reset()
+        if self.tracer is not None:
+            self.tracer.reset()
 
     def stats(self) -> Dict[str, float]:
         util = self.util_history
-        return {
+        out: Dict[str, float] = {
             "active": self.sm.n_active(),
             "queued": len(self.scheduler),
-            "completed": self.completed,
-            "total_tokens": self.total_tokens,
-            "ticks": self._tick,
-            "mean_util": sum(util) / len(util) if util else 0.0,
-            "instant_admits": self.instant_admits,
-            "host_syncs": self.host_syncs,
-            "decode_chunks": self.decode_chunks,
-            "prefill_calls": self.prefill_calls,
-            "prefill_compiles": len(self.prefill_shapes),
-            "preemptions": self.preemptions,
-            "resumes": self.resumes,
-            "evicted_tokens": self.evicted_tokens,
-            "shed": self.shed,
         }
+        out.update(self.metrics.view({
+            "completed": "engine.completed",
+            "total_tokens": "engine.total_tokens",
+        }))
+        out["ticks"] = self._tick
+        out["mean_util"] = sum(util) / len(util) if util else 0.0
+        out.update(self.metrics.view({
+            "instant_admits": "engine.instant_admits",
+            "host_syncs": "engine.host_syncs",
+            "decode_chunks": "engine.decode_chunks",
+            "prefill_calls": "engine.prefill_calls",
+        }))
+        out["prefill_compiles"] = len(self.prefill_shapes)
+        out.update(self.metrics.view({
+            "preemptions": "engine.preemptions",
+            "resumes": "engine.resumes",
+            "evicted_tokens": "engine.evicted_tokens",
+            "shed": "engine.shed",
+        }))
+        return out
 
 
 # re-exported for back-compat: the policy registry lives in scheduler.py

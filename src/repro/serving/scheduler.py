@@ -40,13 +40,24 @@ of the submission/completion sequence.  ``SCHEDULERS`` is the single
 registry: the engine validates against it and the ``--policy`` CLI
 choices are generated from it, so the two cannot drift (enforced by the
 benchmark smoke guard).
+
+Telemetry lives in a :class:`repro.obs.registry.MetricsRegistry` (the
+engine passes its own in, so ``engine.reset_telemetry()`` covers the
+scheduler counters too): ``scheduler.submitted`` / ``scheduler.picked``
+/ ``scheduler.requeued`` counters, a derived ``scheduler.queue_depth``
+gauge, and a ``scheduler.peak_queued`` high-water mark, surfaced with
+stable keys via :meth:`Scheduler.stats`.  Subclasses implement
+:meth:`Scheduler._select`; the public :meth:`Scheduler.pick` wraps it
+with the bookkeeping so no policy can forget to count.
 """
 
 from __future__ import annotations
 
 import math
 from collections import deque
-from typing import TYPE_CHECKING, Dict, List, Sequence, Tuple, Type
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Type
+
+from repro.obs.registry import MetricsRegistry
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle (engine imports us)
     from repro.serving.engine import Request
@@ -69,13 +80,28 @@ class Scheduler:
     name: str = "base"
     preemptive: bool = False
 
-    def __init__(self) -> None:
+    def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
         self.queue: deque = deque()
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._submitted = self.metrics.counter(
+            "scheduler.submitted", "requests enqueued")
+        self._picked = self.metrics.counter(
+            "scheduler.picked", "requests handed to the engine for admission")
+        self._requeued = self.metrics.counter(
+            "scheduler.requeued", "requests handed back (no capacity / "
+            "preemption victims)")
+        self._peak = self.metrics.gauge(
+            "scheduler.peak_queued", "high-water mark of the pending queue")
+        self.metrics.gauge("scheduler.queue_depth",
+                           "current pending-queue length",
+                           fn=lambda: float(len(self.queue)))
 
     # ------------------------------------------------------------- queue ops
     def submit(self, req: "Request") -> None:
         """Enqueue a new request."""
         self.queue.append(req)
+        self._submitted.inc()
+        self._peak.set(max(self._peak.value, float(len(self.queue))))
 
     def requeue_front(self, req: "Request") -> None:
         """Hand back a request the engine could not place this tick (or a
@@ -83,13 +109,34 @@ class Scheduler:
         (``uid``, assigned monotonically at submit) and goes to the queue
         front so FIFO-style policies retry it first."""
         self.queue.appendleft(req)
+        self._requeued.inc()
+        self._peak.set(max(self._peak.value, float(len(self.queue))))
 
     def __len__(self) -> int:
         return len(self.queue)
 
+    def stats(self) -> Dict[str, float]:
+        """Counter snapshot under stable keys (a registry view)."""
+        return self.metrics.view({
+            "submitted": "scheduler.submitted",
+            "picked": "scheduler.picked",
+            "requeued": "scheduler.requeued",
+            "queue_depth": "scheduler.queue_depth",
+            "peak_queued": "scheduler.peak_queued",
+        })
+
     # --------------------------------------------------------------- policy
     def pick(self, n: int) -> List["Request"]:
-        """Remove and return up to ``n`` requests to admit, in order."""
+        """Remove and return up to ``n`` requests to admit, in order.
+
+        Wraps the subclass :meth:`_select` with counter bookkeeping, so
+        every policy counts picks identically."""
+        picked = self._select(n)
+        self._picked.inc(len(picked))
+        return picked
+
+    def _select(self, n: int) -> List["Request"]:
+        """Policy hook: remove and return up to ``n`` requests."""
         raise NotImplementedError
 
     def victims(self, running: Sequence[Tuple[int, "Request"]],
@@ -112,7 +159,7 @@ class FCFS(Scheduler):
 
     name = "fcfs"
 
-    def pick(self, n: int) -> List["Request"]:
+    def _select(self, n: int) -> List["Request"]:
         n = min(n, len(self.queue))
         return [self.queue.popleft() for _ in range(n)]
 
@@ -122,7 +169,7 @@ class SPF(Scheduler):
 
     name = "spf"
 
-    def pick(self, n: int) -> List["Request"]:
+    def _select(self, n: int) -> List["Request"]:
         n = min(n, len(self.queue))
         order = sorted(range(len(self.queue)),
                        key=lambda j: (len(self.queue[j].prompt), j))[:n]
@@ -142,8 +189,9 @@ class EDF(Scheduler):
 
     name = "edf"
 
-    def __init__(self, preempt: bool = False) -> None:
-        super().__init__()
+    def __init__(self, preempt: bool = False,
+                 registry: Optional[MetricsRegistry] = None) -> None:
+        super().__init__(registry)
         self.preemptive = bool(preempt)
 
     def _key(self, req: "Request") -> Tuple[float, int]:
@@ -151,7 +199,7 @@ class EDF(Scheduler):
         # submission order — an evicted request keeps its original rank
         return (_deadline(req), req.uid)
 
-    def pick(self, n: int) -> List["Request"]:
+    def _select(self, n: int) -> List["Request"]:
         n = min(n, len(self.queue))
         order = sorted(range(len(self.queue)),
                        key=lambda j: self._key(self.queue[j]))[:n]
@@ -189,17 +237,20 @@ SCHEDULERS: Dict[str, Type[Scheduler]] = {
 POLICIES: Tuple[str, ...] = tuple(SCHEDULERS)
 
 
-def make_scheduler(policy: str, *, preempt: bool = False) -> Scheduler:
+def make_scheduler(policy: str, *, preempt: bool = False,
+                   registry: Optional[MetricsRegistry] = None) -> Scheduler:
     """Instantiate a registered policy.  ``preempt`` is only meaningful
     for preemption-capable policies (EDF); requesting it elsewhere is an
-    error rather than a silent no-op."""
+    error rather than a silent no-op.  ``registry`` shares the caller's
+    :class:`~repro.obs.registry.MetricsRegistry` (the engine passes its
+    own, so one ``reset()`` covers scheduler counters too)."""
     cls = SCHEDULERS.get(policy)
     if cls is None:
         raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
     if cls is EDF:
-        return EDF(preempt=preempt)
+        return EDF(preempt=preempt, registry=registry)
     if preempt:
         raise ValueError(f"policy {policy!r} is non-preemptive; "
                          f"preempt=True requires one of: "
                          f"{[n for n, c in SCHEDULERS.items() if c is EDF]}")
-    return cls()
+    return cls(registry)

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LM
+from repro.obs.registry import MetricsRegistry
 
 
 def _index(a, ax: int, idx):
@@ -93,7 +94,8 @@ class SlotManager:
     refresh), and never touches the cache layout directly.  Policy — who
     gets a slot — stays in :mod:`repro.serving.scheduler`."""
 
-    def __init__(self, model: LM, max_batch: int, max_len: int):
+    def __init__(self, model: LM, max_batch: int, max_len: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.max_batch = max_batch
         self.cache = model.init_cache(max_batch, max_len)
         self.axes = model.cache_batch_axes(self.cache)
@@ -103,6 +105,21 @@ class SlotManager:
         self.active = np.zeros((max_batch,), bool)
         self.eos = np.full((max_batch,), -1, np.int32)
         self.remaining = np.zeros((max_batch,), np.int32)
+        # telemetry: shared with the engine's registry when passed in,
+        # so engine.reset_telemetry() covers slot counters too
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._snapshots = self.metrics.counter(
+            "slots.snapshots", "slot columns gathered to host (evictions)")
+        self._restores = self.metrics.counter(
+            "slots.restores", "snapshots scattered back into slots")
+        self._snapshot_bytes = self.metrics.counter(
+            "slots.snapshot_bytes", "host bytes held by eviction snapshots")
+        self._prefill_inserts = self.metrics.counter(
+            "slots.prefill_inserts", "prefill rows scattered into slots")
+        self.metrics.gauge("slots.active", "occupied decode slots",
+                           fn=lambda: float(self.n_active()))
+        self.metrics.gauge("slots.free", "free decode slots",
+                           fn=lambda: float(self.max_batch - self.n_active()))
 
     # ------------------------------------------------------------ occupancy
     def free(self) -> List[int]:
@@ -140,6 +157,7 @@ class SlotManager:
         """Scatter prefill-cache rows into engine slots (one pytree op for
         the whole admitted group): the write half of the gather/scatter
         pair, with the prefill batch rows as the source columns."""
+        self._prefill_inserts.inc(len(list(slots)))
         sl = jnp.asarray(list(slots), jnp.int32)
         rw = jnp.asarray(list(rows), jnp.int32)
         self.cache = jax.tree.map(
@@ -166,8 +184,11 @@ class SlotManager:
         for k, slot in enumerate(slots):
             col = jax.tree.map(lambda a, ax, k=k: np.take(a, [k], axis=ax),
                                cols, self.axes)
-            out.append(SlotSnapshot(cache_col=col,
-                                    next_token=int(self.next_token[slot])))
+            snap = SlotSnapshot(cache_col=col,
+                                next_token=int(self.next_token[slot]))
+            self._snapshots.inc()
+            self._snapshot_bytes.inc(snap.nbytes())
+            out.append(snap)
         return out
 
     def restore(self, slot: int, snap: SlotSnapshot, req) -> None:
@@ -175,6 +196,7 @@ class SlotManager:
         and re-arm the control mirrors — the resume half.  No model call,
         no sampler-key consumption: the request decodes its next tick as
         if it had never left."""
+        self._restores.inc()
         self.cache = scatter_slots(self.cache, self.axes, [slot],
                                    snap.cache_col)
         self.slots[slot] = req
@@ -194,5 +216,6 @@ class SlotManager:
              for r in self.slots], np.int32)
 
     def stats(self) -> Dict[str, int]:
+        # historical keys preserved; extended counters live in .metrics
         return {"active": self.n_active(),
                 "free": self.max_batch - self.n_active()}

@@ -324,7 +324,8 @@ class WallClock:
 
 def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
           clock=None, max_ticks: int = 1_000_000,
-          sync_every: Optional[int] = None) -> List[Request]:
+          sync_every: Optional[int] = None,
+          on_tick=None) -> List[Request]:
     """Replay a workload against an engine: submit each item when the clock
     reaches its arrival time, run the engine until fully drained.  Returns
     the Request objects (all done) in arrival order.
@@ -342,6 +343,11 @@ def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
     Sets ``clock.busy_seconds`` to the wall time spent inside
     ``engine.step()`` (idle waits for arrivals excluded), so wall-clock
     callers can derive an honest per-tick cost even at low arrival rates.
+
+    ``on_tick`` (optional) is called as ``on_tick(engine.ticks)`` after
+    every step that advanced the clock — the hook the serve CLI's
+    ``--live-metrics`` uses to print its rolling window without drive()
+    knowing anything about observability.
     """
     if clock is None:
         clock = VirtualClock()
@@ -372,6 +378,8 @@ def drive(engine: ServingEngine, items: Sequence[WorkloadItem],
         busy += time.perf_counter() - t0
         for _ in range(engine.ticks - before):
             clock.tick()
+        if on_tick is not None and engine.ticks != before:
+            on_tick(engine.ticks)
     raise RuntimeError(f"workload did not drain within {max_ticks} steps "
                        f"({i}/{len(pending)} submitted)")
 

@@ -1,0 +1,99 @@
+"""serving.metrics edge cases: empty/single-sample percentiles, zero
+tick_seconds scaling, and all-shed SLO blocks — pure host-side units, no
+model build."""
+
+import math
+
+import pytest
+
+from repro.serving import metrics as smetrics
+from repro.serving.engine import Request
+from repro.serving.metrics import aggregate, percentile, scale_latencies
+
+
+def _done(uid, t_submit=0, t_admit=1, t_first=1, t_done=4, n_tokens=4,
+          deadline=None):
+    r = Request(uid, [1, 2, 3], max_new_tokens=max(1, n_tokens),
+                deadline=deadline, t_submit=t_submit)
+    r.t_admit, r.t_first, r.t_done = t_admit, t_first, t_done
+    r.output = list(range(n_tokens))
+    r.done = True
+    return r
+
+
+def _shed(uid, deadline=1.0):
+    r = Request(uid, [1, 2], deadline=deadline)
+    r.shed = True
+    return r
+
+
+def test_percentile_empty_is_nan():
+    for q in (0, 50, 95, 100):
+        assert math.isnan(percentile([], q))
+
+
+def test_percentile_single_sample_is_that_sample_at_every_rank():
+    for q in (0, 1, 50, 95, 99, 100):
+        assert percentile([7.5], q) == 7.5
+
+
+def test_percentile_nearest_rank_two_samples():
+    # nearest-rank: p50 of [1, 9] is the first sample, p51+ the second
+    assert percentile([9.0, 1.0], 50) == 1.0
+    assert percentile([9.0, 1.0], 51) == 9.0
+    assert percentile([9.0, 1.0], 0) == 1.0     # rank clamps to 1
+    assert percentile([9.0, 1.0], 100) == 9.0
+
+
+def test_aggregate_empty_run_is_all_nan_but_well_formed():
+    agg = aggregate([], ticks=0)
+    assert agg["completed"] == 0 and agg["submitted"] == 0
+    assert agg["tokens"] == 0
+    assert math.isnan(agg["ttft"]["p95"])
+    assert math.isnan(agg["mean_util"])
+    assert math.isnan(agg["tokens_per_sec"])    # zero-tick span
+    assert "slo" not in agg and "preemption" not in agg
+    # and it still formats without raising
+    assert "completed 0/0" in smetrics.format_summary(agg)
+
+
+def test_aggregate_single_token_request_has_no_tpot_sample():
+    agg = aggregate([_done(0, n_tokens=1, t_done=1)], ticks=2)
+    assert agg["tpot"]["n"] == 0 and math.isnan(agg["tpot"]["p95"])
+    assert agg["ttft"]["n"] == 1
+
+
+def test_scale_latencies_zero_tick_seconds():
+    """A degenerate calibration (0 measured seconds per tick) must not
+    divide by zero: latencies scale to 0 ms and throughput is NaN."""
+    agg = aggregate([_done(0)], ticks=5)
+    out = scale_latencies(agg, 0.0)
+    assert out["tick_seconds"] == 0.0
+    assert out["ttft_ms"]["p50"] == 0.0
+    assert math.isnan(out["tokens_per_sec"])
+
+
+def test_scale_latencies_maps_ticks_to_ms():
+    agg = aggregate([_done(0)], ticks=5)
+    out = scale_latencies(agg, 0.002)
+    assert out["ttft_ms"]["p50"] == pytest.approx(
+        agg["ttft"]["p50"] * 2.0)   # 2 ms per tick
+    assert out["tokens_per_sec"] == pytest.approx(
+        agg["tokens"] / (5 * 0.002))
+
+
+def test_slo_block_when_every_request_is_shed():
+    """All-shed runs: nothing completes, every deadline counts as a
+    violation, attainment is exactly 0, and the shed count appears."""
+    reqs = [_shed(i) for i in range(3)]
+    agg = aggregate(reqs, ticks=4)
+    assert agg["completed"] == 0 and agg["submitted"] == 3
+    slo = agg["slo"]
+    assert slo == {"n": 3, "met": 0, "violations": 3, "attainment": 0.0,
+                   "shed": 3}
+    assert "3 shed at submit" in smetrics.format_summary(agg)
+
+
+def test_slo_shed_key_absent_without_shedding():
+    agg = aggregate([_done(0, deadline=10.0)], ticks=5)
+    assert "shed" not in agg["slo"] and agg["slo"]["attainment"] == 1.0

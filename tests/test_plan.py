@@ -281,8 +281,8 @@ def test_preempt_many_matches_sequential_schedule(built):
                 req.saved = eng.sm.snapshot(slot)
                 req.n_preempts += 1
                 req.t_preempts.append(eng.ticks)
-                eng.preemptions += 1
-                eng.evicted_tokens += len(req.output)
+                eng.metrics["engine.preemptions"].inc()
+                eng.metrics["engine.evicted_tokens"].inc(len(req.output))
                 eng.sm.release(slot)
                 eng.scheduler.requeue_front(req)
         eng.run()

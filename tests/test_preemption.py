@@ -184,7 +184,7 @@ def test_deadline_flows_from_submit_and_reset_clears_counters(setup):
     r = eng.submit([1, 2, 3], max_new_tokens=2, deadline=42.0)
     assert r.deadline == 42.0
     eng.run()
-    eng.preemptions = 3          # simulate history, then reset
+    eng.metrics["engine.preemptions"].inc(3)   # simulate history, then reset
     eng.reset_telemetry()
     s = eng.stats()
     assert s["preemptions"] == 0 and s["resumes"] == 0

@@ -72,6 +72,36 @@ def test_committed_cells_embed_plans_and_auto_beats_default():
                 > fcfs["metrics"]["slo"]["attainment"])
 
 
+def test_committed_drift_cells_show_replan_beating_stale():
+    """Observability acceptance: the committed drifting-workload cells
+    embed valid plans; the replan's provenance records the profile
+    fitted from the observed trace plus a trace summary, and the
+    re-autotuned plan beats the stale calm-tuned plan on SLO
+    attainment on the same drifted workload."""
+    import json
+    from pathlib import Path
+
+    doc = json.loads((Path(__file__).resolve().parent.parent /
+                      "BENCH_serving.json").read_text())
+    cells = {c["name"]: c for c in doc["cells"]}
+    stale = next(c for n, c in cells.items() if n.endswith("/drift-stale"))
+    replan = next(c for n, c in cells.items()
+                  if n.endswith("/drift-replan"))
+    # the stale plan was tuned on calm deadline-free traffic: no deadline
+    # policy, and its probe workload is not the drifted one
+    assert stale["plan"]["policy"] == "fcfs"
+    prov = replan["plan"]["provenance"]
+    assert prov["autotune"]["probes"]
+    obs = prov["observed_traffic"]
+    assert obs["trace_summary"]["submits"] > 0
+    assert obs["trace_summary"]["with_deadline"] > 0
+    assert obs["fitted_profile"]["rate"] > 0
+    # the drift the replan must react to: more capacity than the stale plan
+    assert replan["plan"]["max_batch"] > stale["plan"]["max_batch"]
+    assert (replan["metrics"]["slo"]["attainment"]
+            > stale["metrics"]["slo"]["attainment"])
+
+
 @pytest.mark.slow
 def test_cell_metrics_identical_across_runs():
     """The acceptance contract: two same-seed virtual-clock runs of a cell
