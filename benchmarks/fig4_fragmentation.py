@@ -1,19 +1,50 @@
-"""Paper Fig. 4: compute fragmentation, MVM-tiled vs loop-based designs.
+"""Paper Fig. 4 revisited: fragmentation, compute *and* memory.
 
-Utilization = useful MACs / issued MACs for (a) a Brainwave-geometry tiled
-MVM engine (2-D fragmentation on H and R) and (b) the loop-based design
-(1-D fragmentation on R only), across hidden sizes.
+Part A — the paper's own figure: compute fragmentation, MVM-tiled vs
+loop-based designs.  Utilization = useful MACs / issued MACs for (a) a
+Brainwave-geometry tiled MVM engine (2-D fragmentation on H and R) and
+(b) the loop-based design (1-D fragmentation on R only), across hidden
+sizes.
+
+Part B — the serving-tier analogue of the same argument (PR 7): *memory*
+fragmentation.  The dense slot-state layout pads every slot's cache to
+``max_batch x max_len`` columns, so resident bytes are a worst-case
+constant regardless of what the traffic actually holds; the paged layout
+(``repro.serving.paged``) provisions blocks per covered tokens, so
+resident bytes track the work in flight.  For each committed heavy-tail
+serving cell (lognormal / bimodal prompt distributions and the
+heavy-decode overload mix) this benchmark serves the *same seeded
+workload* under both layouts and records the trajectory — tokens in
+flight vs bytes resident vs padding waste, sampled on the virtual clock —
+into ``BENCH_fragmentation.json``.  Both runs are deterministic (bytes
+come from ``ParamSpec`` accounting, the clock is virtual), so the
+committed document is byte-diffable like ``BENCH_serving.json``, and the
+benchmark *asserts* the two contracts on every cell: identical
+tokens-in-flight trajectories (the schedules are bit-exact) and paged
+``bytes_resident <= dense`` at every sample.
+
+  PYTHONPATH=src python -m benchmarks.fig4_fragmentation [--out PATH]
 """
 
 from __future__ import annotations
 
-from typing import List
+import argparse
+import dataclasses
+import json
+from typing import Dict, Iterator, List, Optional, Sequence
 
 from benchmarks.common import Row
 from repro.core import dse
 
+SCHEMA = "fragmentation/v1"
+DEFAULT_OUT = "BENCH_fragmentation.json"
+# block size used when paging a committed dense cell for comparison (the
+# sweep's own paged cells keep their recorded block size)
+TRAJECTORY_BLOCK = 16
 
-def run(fast: bool = True) -> List[Row]:
+
+def compute_rows() -> List[Row]:
+    """Part A: the paper's compute-fragmentation figure (unchanged)."""
     rows: List[Row] = []
     ratios = []
     for H in (256, 512, 1024, 1536, 2048, 2560, 2816):
@@ -33,3 +64,190 @@ def run(fast: bool = True) -> List[Row]:
     rows.append(Row("fragmentation/geomean_advantage", 0.0,
                     f"advantage={geo:.2f}x"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Part B: memory-fragmentation trajectories, dense vs paged.
+# ---------------------------------------------------------------------------
+
+
+def memory_cells() -> List["ServingLoadCell"]:  # noqa: F821 (doc name)
+    """The committed heavy-tail cells this benchmark trajectories: the
+    prompt-distribution sweep's lognormal/bimodal cells (both the rwkv b4
+    originals and the paged qwen b8 capacity cells) plus the heavy-decode
+    overload mix under FCFS."""
+    from repro.configs import SERVING_LOAD_SWEEP
+
+    tails = [c for c in SERVING_LOAD_SWEEP
+             if c.prompt_dist in ("lognormal", "bimodal")
+             and c.heavy_decode is None]
+    heavy = [c for c in SERVING_LOAD_SWEEP
+             if c.heavy_decode is not None and c.policy == "fcfs"]
+    return tails + heavy
+
+
+def _trajectory(plan, workload, *, seed: int, duration: float,
+                _built) -> Dict[str, object]:
+    """Serve ``workload`` under ``plan`` on the virtual clock, sampling
+    the slot manager's fragmentation gauges after every engine step.
+    Pure function of (plan, workload, seed) — every field is an int."""
+    from repro.dist.sharding import make_sharder
+    from repro.serving import ServingEngine, drive, profile_items
+
+    cfg, model, params = _built
+    sharder = make_sharder(cfg, None, plan.shard_mode)
+    engine = ServingEngine.from_plan(plan, params, model=model,
+                                     sharder=sharder, seed=seed)
+    items = profile_items(workload, vocab_size=cfg.vocab_size, seed=seed,
+                          duration=duration)
+    ticks: List[int] = []
+    tokens: List[int] = []
+    resident: List[int] = []
+    waste: List[int] = []
+
+    def sample(t: int) -> None:
+        ticks.append(int(t))
+        tokens.append(int(engine.sm.tokens_in_flight()))
+        resident.append(int(engine.sm.bytes_resident()))
+        waste.append(int(engine.sm.padding_waste()))
+
+    drive(engine, items, on_tick=sample)
+    n = max(1, len(resident))
+    return {
+        "cache_layout": plan.cache_layout,
+        "ticks": ticks,
+        "tokens_in_flight": tokens,
+        "bytes_resident": resident,
+        "padding_waste": waste,
+        "peak_bytes": max(resident, default=0),
+        "mean_bytes": int(round(sum(resident) / n)),
+    }
+
+
+def run_memory_cell(cell, *, seed: int = 0, duration: float = 32.0,
+                    reduced: bool = True, _built=None) -> Dict[str, object]:
+    """One before/after pair: the cell's workload served dense and paged.
+    Raises if the tokens-in-flight trajectories differ (the schedules are
+    contractually bit-exact) or if paged bytes ever exceed dense (the
+    acceptance criterion this benchmark exists to pin)."""
+    from benchmarks.serving_load import _build
+    from repro.plan.plan import parse_cache_layout
+
+    built = _built or _build(cell.arch, reduced)
+    block = parse_cache_layout(cell.plan.cache_layout) or TRAJECTORY_BLOCK
+    dense_plan = dataclasses.replace(cell.plan, cache_layout="dense")
+    paged_plan = dataclasses.replace(cell.plan,
+                                     cache_layout=f"paged:{block}")
+    duration = cell.duration if cell.duration is not None else duration
+    dense = _trajectory(dense_plan, cell.workload, seed=seed,
+                        duration=duration, _built=built)
+    paged = _trajectory(paged_plan, cell.workload, seed=seed,
+                        duration=duration, _built=built)
+    if dense["tokens_in_flight"] != paged["tokens_in_flight"]:
+        raise RuntimeError(
+            f"{cell.name}: dense and paged tokens-in-flight trajectories "
+            f"diverged — the paged manager broke the bit-exact schedule "
+            f"contract")
+    over = [t for t, (p, d) in enumerate(zip(paged["bytes_resident"],
+                                             dense["bytes_resident"]))
+            if p > d]
+    if over:
+        raise RuntimeError(
+            f"{cell.name}: paged bytes_resident exceeds dense at sample(s) "
+            f"{over[:5]} — paging must never cost more memory than the "
+            f"worst-case dense columns")
+    return {
+        "name": cell.name,
+        "arch": cell.arch,
+        "family": cell.family,
+        "max_batch": cell.max_batch,
+        "prompt_dist": cell.prompt_dist,
+        "heavy_decode": list(cell.heavy_decode) if cell.heavy_decode
+        else None,
+        "duration": duration,
+        "block_size": block,
+        "dense": dense,
+        "paged": paged,
+        # headline: bytes the paged layout leaves free at the dense peak
+        "peak_saving_bytes": dense["peak_bytes"] - paged["peak_bytes"],
+    }
+
+
+def memory_sweep(cells: Optional[Sequence] = None, *, seed: int = 0,
+                 duration: float = 32.0,
+                 reduced: bool = True) -> Dict[str, object]:
+    """The full Part-B document (everything in it is deterministic for a
+    fixed seed — commit it, diff it)."""
+    from benchmarks.serving_load import _build
+
+    cells = list(cells if cells is not None else memory_cells())
+    built: Dict[str, tuple] = {}
+    out = []
+    for cell in cells:
+        if cell.arch not in built:
+            built[cell.arch] = _build(cell.arch, reduced)
+        out.append(run_memory_cell(cell, seed=seed, duration=duration,
+                                   reduced=reduced,
+                                   _built=built[cell.arch]))
+    return {
+        "schema": SCHEMA,
+        "seed": seed,
+        "reduced": reduced,
+        "cells": out,
+    }
+
+
+def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def _memory_rows(doc: Dict[str, object]) -> Iterator[Row]:
+    for c in doc["cells"]:
+        d, p = c["dense"], c["paged"]
+        saving = (1.0 - c["paged"]["peak_bytes"] / d["peak_bytes"]) \
+            if d["peak_bytes"] else 0.0
+        yield Row(
+            f"fragmentation/mem/{c['name']}",
+            0.0,
+            f"dense_peak={d['peak_bytes']}B;"
+            f"paged_peak={p['peak_bytes']}B;"
+            f"paged_mean={p['mean_bytes']}B;"
+            f"peak_saving={saving:.2f}",
+        )
+
+
+def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
+    """benchmarks.run harness entry.  ``smoke`` trajectories one tiny
+    heavy-tail cell (shrunk workload, no BENCH write) so tier-1 CI proves
+    the dense≡paged schedule contract and the bytes bound still hold;
+    real runs sweep every committed heavy-tail cell and refresh
+    ``BENCH_fragmentation.json``."""
+    yield from compute_rows()
+    if smoke:
+        cell = next(c for c in memory_cells()
+                    if c.family == "rwkv" and c.prompt_dist == "lognormal")
+        doc = memory_sweep([cell.with_duration(8.0)])
+    else:
+        doc = memory_sweep()
+        write(doc)
+    yield from _memory_rows(doc)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    doc = memory_sweep(seed=args.seed)
+    write(doc, args.out)
+    print(f"wrote {args.out}: {len(doc['cells'])} cells")
+    for c in doc["cells"]:
+        print(f"  {c['name']:>40}  dense peak {c['dense']['peak_bytes']:>9}B"
+              f"  paged peak {c['paged']['peak_bytes']:>9}B"
+              f"  saved {c['peak_saving_bytes']:>9}B")
+
+
+if __name__ == "__main__":
+    main()

@@ -374,12 +374,61 @@ def _check_trace_schema() -> None:
                            f"from the smoke trace: {prof}")
 
 
+def _check_paged_surface() -> None:
+    """CI guard for the paged cache layout: the serve CLI must expose
+    ``--cache-layout``, ``parse_cache_layout`` must accept both spellings,
+    the sweep must exercise a paged cell, and a tiny dense-vs-paged probe
+    on a hybrid (attention + SSM) arch must produce identical schedules
+    and metrics with clean pool invariants — loudly, in tier-1, so the
+    bit-exactness contract can never silently rot."""
+    from repro.launch.serve import build_parser
+    from repro.plan.plan import parse_cache_layout
+
+    if not any("--cache-layout" in a.option_strings
+               for a in build_parser()._actions):
+        raise RuntimeError("launch/serve.py no longer exposes "
+                           "--cache-layout")
+    if parse_cache_layout("paged:16") != 16 \
+            or parse_cache_layout("dense") is not None:
+        raise RuntimeError("repro.plan.parse_cache_layout drifted from "
+                           "the dense / paged:<block_size> grammar")
+    if not any(c.cache_layout != "dense" for c in SERVING_LOAD_SWEEP):
+        raise RuntimeError("SERVING_LOAD_SWEEP no longer exercises a "
+                           "paged cell; the layout has no trajectory "
+                           "coverage")
+
+    tiny = WorkloadProfile(kind="poisson", rate=0.6, duration=8.0)
+    cfg, model, params = _build("hymba-1.5b", reduced=True)
+    sharder = make_sharder(cfg, None, "decode")
+
+    def one_run(layout: str):
+        engine = ServingEngine(model, params, sharder, max_batch=2,
+                               max_len=32, cache_layout=layout)
+        reqs = drive(engine, profile_items(tiny, vocab_size=cfg.vocab_size,
+                                           seed=0))
+        agg = smetrics.aggregate(reqs, ticks=engine.ticks,
+                                 util_history=engine.util_history)
+        return engine, [(r.uid, tuple(r.output)) for r in reqs], agg
+
+    _, sched_d, agg_d = one_run("dense")
+    eng_p, sched_p, agg_p = one_run("paged:8")
+    if sched_d != sched_p:
+        raise RuntimeError("dense and paged:8 schedules diverged on the "
+                           "hymba smoke probe; the paged manager broke "
+                           "the bit-exactness contract")
+    if json.dumps(agg_d, sort_keys=True) != json.dumps(agg_p, sort_keys=True):
+        raise RuntimeError("dense and paged:8 metrics diverged on the "
+                           "hymba smoke probe despite equal schedules")
+    eng_p.sm.check_invariants()   # raises on any pool-accounting breach
+
+
 def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
     """benchmarks.run harness entry: emit one CSV row per cell and refresh
     BENCH_serving.json in the working directory.  ``smoke`` runs one tiny
     base cell plus the overload scenario (every policy in it, preemption
     included), checks the plan JSON schema, validates the trace schema +
-    byte-determinism, and autotunes one tiny cell — and does NOT touch
+    byte-determinism, probes the paged cache layout against dense, and
+    autotunes one tiny cell — and does NOT touch
     BENCH_serving.json; it proves the scripts, the scheduler registry,
     the plan subsystem, and the observability layer still work (the
     tier-1 CI guard)."""
@@ -387,6 +436,7 @@ def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
         _check_policy_registry()
         _check_plan_surface()
         _check_trace_schema()
+        _check_paged_surface()
         base = [c for c in SERVING_LOAD_SWEEP
                 if c.family == "rwkv" and c.max_batch == 2
                 and c.policy == "fcfs" and c.prompt_dist == "uniform"

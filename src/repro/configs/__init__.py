@@ -144,6 +144,7 @@ class ServingLoadCell:
                  max_batch: Optional[int] = None,
                  rate: Optional[float] = None, *,
                  policy: str = "fcfs", preempt: bool = False,
+                 cache_layout: str = "dense",
                  prompt_dist: str = "uniform",
                  heavy_decode: Optional[Tuple[float, int, int]] = None,
                  deadline_slack: Optional[float] = None,
@@ -157,7 +158,7 @@ class ServingLoadCell:
                                  "or an explicit plan")
             plan = ServingPlan(arch=arch, max_batch=max_batch,
                                max_len=self.MAX_LEN, policy=policy,
-                               preempt=preempt)
+                               preempt=preempt, cache_layout=cache_layout)
         if workload is None:
             if rate is None:
                 raise ValueError("ServingLoadCell needs rate or an "
@@ -189,6 +190,10 @@ class ServingLoadCell:
     @property
     def preempt(self) -> bool:
         return self.plan.preempt
+
+    @property
+    def cache_layout(self) -> str:
+        return self.plan.cache_layout
 
     @property
     def rate(self) -> float:
@@ -239,6 +244,9 @@ class ServingLoadCell:
             n += "/heavy"
         if self.policy != "fcfs" or self.preempt:
             n += f"/{self.policy}" + ("+p" if self.preempt else "")
+        if self.cache_layout != "dense":
+            # "paged:16" -> "paged16" (cell names double as file-safe keys)
+            n += "/" + self.cache_layout.replace(":", "")
         if self.tag:
             n += f"/{self.tag}"
         return n
@@ -284,6 +292,28 @@ _SERVING_OVERLOAD_GRID: Tuple[ServingLoadCell, ...] = tuple(
     for policy, preempt in (("fcfs", False), ("edf", False), ("edf", True))
 )
 
+# Paged-layout cells (PR 7).  The first is a byte-exact *twin* of the
+# committed dense qwen2.5-14b/b4/r1.0 base cell: same plan except
+# cache_layout, so its committed ``metrics`` block must equal the dense
+# twin's exactly (the bit-exactness contract, pinned by
+# tests/test_serving_load.py).  The next two are the capacity story: the
+# same saturating arrival rate under heavy-tail prompt distributions,
+# served with *doubled* admission capacity (8 slots) — affordable because
+# the paged pool bounds resident bytes by blocks actually covered instead
+# of max_batch x max_len columns (benchmarks/fig4_fragmentation.py
+# records the before/after byte trajectory).  On the virtual clock these
+# are directly comparable to the b4 prompt-dist cells above: queue waits
+# collapse because admission, not arithmetic, was the bottleneck.
+PAGED_BLOCK = 16
+_SERVING_PAGED_GRID: Tuple[ServingLoadCell, ...] = tuple(
+    [ServingLoadCell("qwen2.5-14b", "dense", 4, 1.0,
+                     cache_layout=f"paged:{PAGED_BLOCK}")]
+    + [ServingLoadCell("qwen2.5-14b", "dense", 8, 1.0, prompt_dist=dist,
+                       cache_layout=f"paged:{PAGED_BLOCK}")
+       for dist in ("lognormal", "bimodal")]
+)
+
 SERVING_LOAD_SWEEP: Tuple[ServingLoadCell, ...] = (
     _SERVING_BASE_GRID + _SERVING_PROMPT_DIST_GRID + _SERVING_OVERLOAD_GRID
+    + _SERVING_PAGED_GRID
 )

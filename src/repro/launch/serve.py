@@ -79,6 +79,7 @@ _PLAN_FLAGS = (
     ("reduced", "reduced"),
     ("max_batch", "max_batch"),
     ("max_len", "max_len"),
+    ("cache_layout", "cache_layout"),
     ("temperature", "temperature"),
     ("sync_every", "sync_every"),
     ("policy", "policy"),
@@ -124,6 +125,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-len", type=int, default=None,
                     help=f"cache length (CLI default: "
                          f"{_CLI_DEFAULT_MAX_LEN})")
+    ap.add_argument("--cache-layout", default=None, metavar="LAYOUT",
+                    help="cache backing layout: 'dense' (one fixed column "
+                         "per slot) or 'paged:<block_size>' (block-table "
+                         "pool along the length axis, bit-exact schedules "
+                         "either way; plan default dense, autotune searches "
+                         "both)")
     ap.add_argument("--temperature", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0,
                     help="workload + sampler seed")

@@ -244,6 +244,30 @@ class LM:
         return {"blocks": jax.tree.map(lambda _: 1, cache["blocks"]),
                 "lengths": 0}
 
+    # KV-ring leaves: paged along their length(-ring) axis by the paged
+    # slot-state manager.  Everything else — rwkv wkv/shift, ssd/conv,
+    # cross-attn keys, lengths — is per-slot state with no length axis
+    # (or, for xk/xv, written whole at prefill), i.e. "one block per
+    # slot": the cheap recurrent case.
+    PAGEABLE_LEAVES = frozenset({"k", "v", "pos", "k_scale", "v_scale"})
+
+    def cache_page_axes(self, cache) -> Dict[str, Any]:
+        """Length(-ring)-axis index for every *pageable* cache leaf, None
+        for per-slot state — the companion contract to
+        :meth:`cache_batch_axes` that lets the paged slot-state manager
+        (repro.serving.paged) split the cache into a block pool (KV rings,
+        paged along axis 2 after period stacking) and dense per-slot
+        leaves.  Accepts either a live cache pytree or a ``cache_specs``
+        spec tree (classification is by leaf name, not by value)."""
+        def classify(path, _leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else None
+            return 2 if name in self.PAGEABLE_LEAVES else None
+
+        blocks = jax.tree_util.tree_map_with_path(
+            classify, cache["blocks"],
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        return {"blocks": blocks, "lengths": None}
+
     # ---------------------------------------------------------------- prefill
     def prefill(self, params, batch, sharder: Sharder, max_len: int = 0):
         """Full-sequence prefill.  Returns (cache, last_token_logits).

@@ -48,7 +48,11 @@ REQUEST_SPANS = ("queued", "run")
 REQUEST_INSTANTS = ("submit", "first_token", "preempt", "resume", "shed")
 ENGINE_SPANS = ("decode_chunk",)
 ENGINE_INSTANTS = ("prefill", "host_sync", "compile")
-ENGINE_COUNTERS = ("util", "queue_depth")
+ENGINE_COUNTERS = ("util", "queue_depth",
+                   # fragmentation tracks, emitted by paged-layout engines
+                   # only (dense traces carry the first two exactly as
+                   # before — byte-stable)
+                   "blocks_free", "bytes_resident", "padding_waste")
 
 
 @dataclasses.dataclass(frozen=True)

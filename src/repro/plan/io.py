@@ -65,6 +65,7 @@ def check_schema() -> None:
     fields = {f.name for f in dataclasses.fields(ServingPlan)}
     probe = ServingPlan(arch="rwkv6-1.6b",
                         buckets=(8, 16, 63), max_len=64,
+                        cache_layout="paged:16",
                         tile_plans={"rwkv": {"bh": 64}},
                         provenance={"source": "schema-probe"}).validate()
     d = to_dict(probe)

@@ -42,6 +42,29 @@ from typing import Dict, List, Mapping, Optional, Tuple
 MIN_BUCKET = 8   # smallest prefill length bucket (pow2 upward, cap max_len-1)
 
 
+def parse_cache_layout(layout: str) -> Optional[int]:
+    """Parse a ``ServingPlan.cache_layout`` string.
+
+    ``"dense"`` → None (fixed per-slot cache columns);
+    ``"paged:<block_size>"`` → the positive int block size (block-table
+    pool, KV rings paged along the length axis).  Raises ``ValueError``
+    on anything else — this is the single validation point shared by
+    ``ServingPlan.validate`` and the slot-manager factory."""
+    if layout == "dense":
+        return None
+    if isinstance(layout, str) and layout.startswith("paged:"):
+        tail = layout[len("paged:"):]
+        try:
+            block = int(tail)
+        except ValueError:
+            block = 0
+        if block >= 1 and str(block) == tail:
+            return block
+    raise ValueError(
+        f"cache_layout must be 'dense' or 'paged:<block_size>' with a "
+        f"positive integer block size, got {layout!r}")
+
+
 def default_buckets(max_len: int) -> Tuple[int, ...]:
     """The historical pow2 bucket set: MIN_BUCKET doubling up to, and
     capped at, ``max_len - 1`` (the engine's prefill compile ceiling)."""
@@ -146,7 +169,10 @@ class ServingPlan:
 
     * model identity — ``arch`` (the ``repro.configs`` id), ``reduced``
       (CPU-sized config), ``shard_mode`` (the ``repro.dist`` rules key);
-    * capacity — ``max_batch`` decode slots over a ``max_len`` cache;
+    * capacity — ``max_batch`` decode slots over a ``max_len`` cache,
+      backed dense (fixed per-slot columns) or paged (``cache_layout =
+      "paged:<block_size>"``: a block-table pool, see
+      :mod:`repro.serving.paged`);
     * admission — ``bucketed_prefill`` plus the explicit ``buckets`` set
       (``None`` = the historical pow2 set, see :func:`default_buckets`);
     * decode hot path — ``sync_every`` on-device ticks per host sync,
@@ -170,6 +196,7 @@ class ServingPlan:
     # --- capacity --------------------------------------------------------
     max_batch: int = 4
     max_len: int = 128
+    cache_layout: str = "dense"   # or "paged:<block_size>"
     # --- admission -------------------------------------------------------
     bucketed_prefill: bool = True
     buckets: Optional[Tuple[int, ...]] = None
@@ -213,6 +240,11 @@ class ServingPlan:
         if self.max_len < 2:
             raise ValueError(f"plan.max_len must be >= 2 (one prompt token "
                              f"+ one generated), got {self.max_len}")
+        block = parse_cache_layout(self.cache_layout)  # raises on bad form
+        if block is not None and block > self.max_len:
+            raise ValueError(
+                f"plan.cache_layout block size {block} exceeds max_len "
+                f"{self.max_len}: a block never covers more than one ring")
         if self.sync_every < 1:
             raise ValueError(f"plan.sync_every must be >= 1, "
                              f"got {self.sync_every}")
@@ -271,6 +303,8 @@ class ServingPlan:
                 f"sync{self.sync_every}",
                 self.policy + ("+p" if self.preempt else ""),
                 f"buckets={b}"]
+        if self.cache_layout != "dense":
+            bits.append(self.cache_layout)
         if self.shed_late:
             bits.append("shed")
         if not self.overlap_prefill:
@@ -281,4 +315,4 @@ class ServingPlan:
 
 
 __all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET",
-           "default_buckets"]
+           "default_buckets", "parse_cache_layout"]

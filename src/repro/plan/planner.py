@@ -42,6 +42,7 @@ from repro.plan.plan import (
     ServingPlan,
     WorkloadProfile,
     default_buckets,
+    parse_cache_layout,
 )
 
 log = logging.getLogger("repro.plan")
@@ -53,6 +54,11 @@ HOST_SYNC_S = 50e-6
 COMPILE_S = 2.0
 HBM_FRACTION = 0.9        # usable HBM after runtime/fragmentation slack
 SYNC_GAIN_MIN = 0.01      # keep growing the chunk while gain >= 1%
+# paged-layout gather/launch overhead, expressed as extra tokens' worth of
+# bytes per allocated page: smaller blocks fragment less but cost more
+# table indirection, so the layout search has a real block-size trade-off
+# instead of degenerating to "smallest block always wins"
+PAGE_OVERHEAD_TOKENS = 2.0
 
 # recurrent layer kinds that map onto the paper's RNN-cell tile search
 _RECURRENT_KINDS = ("rwkv", "swa_ssm")
@@ -183,6 +189,62 @@ def bucket_set_cost(buckets: Optional[Tuple[int, ...]],
 
 
 # ---------------------------------------------------------------------------
+# Cache layout (dense vs. paged block pool)
+# ---------------------------------------------------------------------------
+
+
+def expected_tokens_per_slot(items, max_len: int) -> float:
+    """Conservative resident-token estimate per occupied slot: the p95 of
+    each request's full footprint (prompt + decode budget, capped at the
+    cache length).  p95 rather than the mean because a paged pool is
+    provisioned for the tokens actually in flight — undershooting the
+    tail is what fragmentation-free layouts must *not* do."""
+    if not items:
+        return float(max_len)
+    toks = sorted(min(max_len, len(it.prompt) + it.max_new_tokens)
+                  for it in items)
+    return float(toks[min(len(toks) - 1, math.ceil(0.95 * len(toks)) - 1)])
+
+
+@functools.lru_cache(maxsize=None)
+def cache_layout_bytes(arch: str, max_batch: int, max_len: int,
+                       layout: str, tokens_per_slot: float) -> int:
+    """Modeled resident cache bytes of the *full-size* config under a
+    cache layout at the expected per-slot token load.  Dense commits the
+    whole ``max_batch x max_len`` cache; paged commits per-slot state
+    plus expected tokens rounded up to block granularity (see
+    :func:`repro.serving.paged.paged_cache_bytes`) plus a per-page
+    overhead charge (:data:`PAGE_OVERHEAD_TOKENS`) standing in for the
+    block-table gather cost."""
+    block = parse_cache_layout(layout)
+    if block is None:
+        return serving_memory_bytes(arch, max_batch, max_len)[1]
+    from repro.serving.paged import paged_cache_bytes
+
+    model = _full_model(arch)
+    base = paged_cache_bytes(model, max_batch, max_len, block,
+                             tokens_per_slot)
+    n_pages = math.ceil(min(max_len, tokens_per_slot) / block)
+    # ring bytes per covered token (per-slot recurrent state excluded:
+    # paging it costs nothing, so a pool-less arch carries no overhead
+    # and ties with dense)
+    floor = paged_cache_bytes(model, max_batch, max_len, block, 0.0)
+    one_page = paged_cache_bytes(model, max_batch, max_len, block,
+                                 float(block))
+    per_tok = (one_page - floor) // max(1, max_batch * block)
+    overhead = int(PAGE_OVERHEAD_TOKENS * per_tok * n_pages * max_batch)
+    return base + overhead
+
+
+def candidate_cache_layouts(max_len: int,
+                            block_sizes: Sequence[int]) -> List[str]:
+    """Layout candidates: dense first (the tie-break winner), then one
+    paged candidate per admissible block size."""
+    return ["dense"] + [f"paged:{b}" for b in sorted(set(int(b)
+                        for b in block_sizes)) if 1 <= b <= max_len]
+
+
+# ---------------------------------------------------------------------------
 # Per-kernel tile plans
 # ---------------------------------------------------------------------------
 
@@ -244,13 +306,23 @@ def autotune(arch: str, workload: WorkloadProfile,
              seed: int = 0, reduced: bool = True, max_len: int = 64,
              max_batches: Sequence[int] = (2, 4, 8),
              sync_everys: Sequence[int] = (1, 2, 4, 8),
+             block_sizes: Sequence[int] = (8, 16, 32),
              probe_duration: float = 32.0) -> ServingPlan:
     """Search the serving design space for one (arch, workload) cell.
 
     Returns the winning validated :class:`ServingPlan` with the search
     recorded under ``provenance["autotune"]``.  Deterministic for a fixed
     (hw_spec, seed): same inputs, same plan.
-    """
+
+    The cache layout (dense vs. ``paged:<block_size>``) is chosen *after*
+    the scheduling probe: virtual-clock schedules are layout-invariant by
+    construction (the paged manager is bit-exact behind the SlotManager
+    seam), so the probe plane does not grow — only the HBM feasibility
+    check and the final bytes-resident comparison see the layouts.  A
+    slot count is feasible when *any* candidate layout fits, which is how
+    paging raises admission capacity under heavy-tail workloads: the
+    expected tokens in flight, not ``max_batch x max_len``, is what has
+    to fit."""
     import jax
 
     from repro.configs import get_config
@@ -273,12 +345,18 @@ def autotune(arch: str, workload: WorkloadProfile,
     items = profile_items(probe_wl, vocab_size=cfg.vocab_size, seed=seed)
     deadlines = any(it.deadline is not None for it in items)
 
-    # --- candidate slot counts: HBM feasibility on the full-size config
+    # --- candidate slot counts: HBM feasibility on the full-size config.
+    # A slot count qualifies when its cheapest candidate layout fits, so
+    # paged layouts can admit batch sizes the dense cache could not.
     budget = hw_spec.hbm_bytes * HBM_FRACTION
+    layouts = candidate_cache_layouts(max_len, block_sizes)
+    t_slot = expected_tokens_per_slot(items, max_len)
     feasible, overcommitted = [], False
     for mb in sorted(set(int(b) for b in max_batches)):
-        weights, cache = serving_memory_bytes(arch, mb, max_len)
-        if weights + cache <= budget:
+        weights, _ = serving_memory_bytes(arch, mb, max_len)
+        cheapest = min(cache_layout_bytes(arch, mb, max_len, lay, t_slot)
+                       for lay in layouts)
+        if weights + cheapest <= budget:
             feasible.append(mb)
     if not feasible:   # weights alone exceed one chip: rank anyway, flag it
         overcommitted = True
@@ -313,8 +391,16 @@ def autotune(arch: str, workload: WorkloadProfile,
              for bs in bsets]
     buckets = bsets[int(np.argmin(costs))]
 
+    # --- cache layout: schedules are layout-invariant, so pick by modeled
+    # resident bytes at the winning slot count; dense is enumerated first
+    # and wins ties, so paging has to actually save memory to be chosen
+    layout_bytes = [(lay, cache_layout_bytes(arch, best.max_batch, max_len,
+                                             lay, t_slot))
+                    for lay in layouts]
+    cache_layout = min(layout_bytes, key=lambda kv: kv[1])[0]
+
     plan = dataclasses.replace(
-        best, sync_every=sync, buckets=buckets,
+        best, sync_every=sync, buckets=buckets, cache_layout=cache_layout,
         tile_plans=tile_plans_for(arch, best.max_batch, hw_spec),
         provenance={"autotune": {
             "hw": hw_spec.name, "seed": seed,
@@ -323,6 +409,10 @@ def autotune(arch: str, workload: WorkloadProfile,
             "memory_overcommitted": overcommitted,
             "probes": probed,
             "best_score": list(best_key),
+            "expected_tokens_per_slot": t_slot,
+            "cache_layouts": [
+                {"layout": lay, "modeled_bytes": b}
+                for lay, b in layout_bytes],
             "bucket_costs": [
                 {"buckets": None if b is None else list(b), "cost_s": c}
                 for b, c in zip(bsets, costs)],
@@ -360,4 +450,7 @@ def autotune_from_trace(arch: str, trace,
 __all__ = ["autotune", "autotune_from_trace", "serving_memory_bytes",
            "modeled_tick_seconds", "pick_sync_every",
            "candidate_bucket_sets", "bucket_set_cost",
-           "tile_plans_for", "HOST_SYNC_S", "COMPILE_S"]
+           "cache_layout_bytes", "candidate_cache_layouts",
+           "expected_tokens_per_slot",
+           "tile_plans_for", "HOST_SYNC_S", "COMPILE_S",
+           "PAGE_OVERHEAD_TOKENS"]

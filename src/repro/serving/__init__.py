@@ -13,10 +13,16 @@ from repro.serving.scheduler import (  # noqa: F401
     Scheduler,
     make_scheduler,
 )
+from repro.serving.paged import (  # noqa: F401
+    PagedSlotManager,
+    canonicalize_cache,
+    paged_cache_bytes,
+)
 from repro.serving.slotstate import (  # noqa: F401
     SlotManager,
     SlotSnapshot,
     gather_slots,
+    make_slot_manager,
     scatter_slots,
 )
 from repro.serving.workload import (  # noqa: F401

@@ -78,7 +78,7 @@ from repro.obs.trace import Tracer
 from repro.plan.plan import MIN_BUCKET, ServingPlan
 from repro.serving.sampler import SamplerConfig, split_and_sample
 from repro.serving.scheduler import POLICIES, Scheduler, make_scheduler
-from repro.serving.slotstate import SlotManager, SlotSnapshot
+from repro.serving.slotstate import SlotSnapshot, make_slot_manager
 
 log = logging.getLogger("repro.serving")
 
@@ -202,12 +202,14 @@ class ServingEngine:
                  bucketed_prefill: bool = True,
                  overlap_prefill: bool = True,
                  shed_late: bool = False,
+                 cache_layout: str = "dense",
                  plan: Optional[ServingPlan] = None,
                  tracer: Optional[Tracer] = None):
         if plan is None:   # kwargs shim: capture the knobs as a plan
             plan = ServingPlan(
                 arch=model.cfg.name, reduced=_is_reduced(model.cfg),
                 max_batch=max_batch, max_len=max_len,
+                cache_layout=cache_layout,
                 sync_every=sync_every, policy=policy, preempt=preempt,
                 bucketed_prefill=bucketed_prefill,
                 overlap_prefill=overlap_prefill, shed_late=shed_late,
@@ -235,8 +237,11 @@ class ServingEngine:
         self.metrics = MetricsRegistry()
         self.scheduler: Scheduler = make_scheduler(
             plan.policy, preempt=plan.preempt, registry=self.metrics)
-        self.sm = SlotManager(model, self.max_batch, self.max_len,
-                              registry=self.metrics)
+        self.cache_layout = plan.cache_layout
+        self._paged = plan.cache_layout != "dense"
+        self.sm = make_slot_manager(model, self.max_batch, self.max_len,
+                                    layout=plan.cache_layout,
+                                    registry=self.metrics)
         c = self.metrics.counter
         self._c_completed = c("engine.completed",
                               "requests finished since construction")
@@ -507,6 +512,9 @@ class ServingEngine:
             self.tracer.compile(self._tick, "decode", self.max_batch,
                                 self.sync_every)
             self._decode_compile_traced = True
+        # paged layout: extend every occupied slot's block coverage for
+        # the chunk's ring writes before the program launches (dense: no-op)
+        self.sm.ensure_chunk(budget)
         tokens_in = self._merge_pending_tokens()
         n, self.sm.cache, self._key, toks, acts, dones = self._decode_many(
             self.params, self.sm.cache, tokens_in, self._key,
@@ -573,6 +581,15 @@ class ServingEngine:
             self.live.observe_tick(tick, util)
         if self.tracer is not None:
             self.tracer.counter(tick, "util", util)
+            if self._paged:
+                # fragmentation tracks, paged runs only — dense traces
+                # stay byte-identical to the pre-paged engine
+                self.tracer.counter(tick, "blocks_free",
+                                    self.sm.blocks_free())
+                self.tracer.counter(tick, "bytes_resident",
+                                    self.sm.bytes_resident())
+                self.tracer.counter(tick, "padding_waste",
+                                    self.sm.padding_waste())
 
     def _merge_pending_tokens(self):
         """Decode-chunk input tokens: the host mirror, with overlapped
@@ -608,6 +625,8 @@ class ServingEngine:
         bit-exactly under greedy decoding (with stochastic sampling the
         engine-global key stream makes resumed tokens slot/tick-dependent
         — see slotstate's module docstring)."""
+        if not slots:
+            return []   # no victims: no gather, no host sync
         reqs: List[Request] = []
         for slot in slots:
             if self.sm.slots[slot] is None:

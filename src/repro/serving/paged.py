@@ -1,0 +1,416 @@
+"""Paged slot-state: a block-table cache manager behind the SlotManager seam.
+
+The dense :class:`repro.serving.slotstate.SlotManager` commits
+``max_batch x max_len`` cache columns up front, so HBM is provisioned for
+the worst-case sequence in every slot — exactly the padding the paper
+argues a spatial design should avoid by capturing design parameters in
+general loop constructs and provisioning per problem size.  This module
+replaces the backing store with a *pool of fixed-size blocks* plus a
+per-slot block table (vLLM/sarathi-serve style), while keeping every
+SlotManager signature and — crucially — every schedule and logit
+bit-exact:
+
+* **What gets paged.** Only the KV ring leaves (``k``/``v``/``pos`` and
+  int8 scales), along their ring axis, as declared per leaf by
+  :meth:`repro.models.lm.LM.cache_page_axes`.  Recurrent/SSM/conv state
+  is O(1) per sequence — the cheap case the paper's RNN focus makes
+  interesting — and stays one dense column per slot, as do cross-attn
+  keys and the ``lengths`` vector.  Pool leaves group by ring length
+  ``S`` (local-window rings saturate at ``S = local_window`` while full
+  rings run to ``max_len``), one block table per (slot, group).
+
+* **Bit-exactness by construction.**  ``.cache`` is a *property*: the
+  getter materializes the same dense ``(periods, max_batch, S, ...)``
+  view the dense manager owns (one ``jnp.take`` per pool leaf through
+  the block table), and the setter re-pages the updated view into the
+  pool.  The engine's fused decode program therefore consumes
+  byte-identical shapes and — because every unallocated table entry
+  points at a reserved *null block* holding the empty-ring pattern
+  (``pos = -1``, zero k/v), and attention masks ``pos < 0`` entries to
+  ``-1e30`` whose softmax weight underflows to exactly ``0.0`` — byte-
+  identical logits.  Schedules, samples, and metrics follow.  (Dense
+  caches hold *different* garbage at masked positions — prefill leaves
+  token-0 copies there — which is why bit-exactness is asserted on
+  logits/schedules and on :func:`canonicalize_cache`-masked columns,
+  not on raw masked bytes.)
+
+* **The null block self-heals.**  Writebacks scatter every slot's full
+  ring view; uncovered ring positions land in the null block (possibly
+  colliding across slots), so the writeback unconditionally rewrites the
+  null block with the empty pattern afterwards.  This also makes
+  restore-from-a-dense-snapshot safe: whatever garbage the snapshot
+  carries in masked positions beyond the allocated prefix is dropped on
+  the floor instead of corrupting the shared null block.
+
+* **Allocation is host-side and deterministic.**  Blocks allocate
+  lowest-id-first from a sorted free list; a slot's pages form a
+  monotone prefix of its ring (ring writes go to ``length % S``, which
+  stays below the covered prefix while ``length < S`` and wraps inside
+  it afterwards).  ``ensure_chunk(budget)`` — called by the engine
+  before each decode chunk — extends each occupied slot's coverage to
+  ``length + budget + 1`` tokens, so a chunk never writes an uncovered
+  position.  The pool is fully provisioned (``max_batch`` worst-case
+  slots + one null block per group) so allocation can never fail and
+  admission never depends on pool state: the *capacity* win is taken by
+  the planner, which can admit a larger ``max_batch`` under the same
+  HBM budget because *expected* resident bytes — what
+  :meth:`bytes_resident` reports and ``benchmarks/fig4_fragmentation``
+  plots — track tokens in flight, not ``max_batch x max_len``.
+
+The per-chunk materialize/writeback is O(cache) of jnp ops outside jit —
+fine for the virtual-clock harness this repo measures with; fusing the
+block-table gather into the decode kernel itself is the ROADMAP
+follow-up (flash-decoding page layout, SNIPPETS.md §3).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+from repro.obs.registry import MetricsRegistry
+from repro.serving.slotstate import SlotManager, SlotSnapshot
+
+NULL_BLOCK = 0   # reserved block id per group: the shared empty pattern
+
+
+class BlockPool:
+    """Host-side bookkeeping for one ring-length group: a block table per
+    slot plus a sorted free list over ``capacity`` block ids (id 0 is the
+    reserved null block and is never allocated)."""
+
+    def __init__(self, ring_len: int, block_size: int, max_batch: int):
+        self.ring_len = ring_len
+        self.block = min(block_size, ring_len)
+        self.n_pages = -(-ring_len // self.block)        # ceil per slot
+        self.capacity = 1 + max_batch * self.n_pages     # + null block
+        self.table = np.zeros((max_batch, self.n_pages), np.int32)
+        self.pages = np.zeros((max_batch,), np.int32)    # allocated prefix
+        self.free_list: List[int] = list(range(1, self.capacity))
+
+    def cover(self, slot: int, tokens: int) -> bool:
+        """Extend ``slot``'s page prefix to cover ``tokens`` ring
+        positions (capped at the ring length).  Returns True if the
+        table changed.  Never shrinks; lowest free ids first."""
+        need = -(-min(self.ring_len, max(0, tokens)) // self.block)
+        have = int(self.pages[slot])
+        if need <= have:
+            return False
+        for p in range(have, need):
+            self.table[slot, p] = self.free_list.pop(0)
+        self.pages[slot] = need
+        return True
+
+    def release(self, slot: int) -> List[int]:
+        """Return all of ``slot``'s blocks to the free list; returns the
+        freed ids so the manager can wipe their contents (the pool
+        invariant is that free blocks always hold the empty pattern —
+        allocation then never surfaces a previous owner's stale ring
+        entries, whose ``pos >= 0`` values attention would treat as
+        live)."""
+        n = int(self.pages[slot])
+        if n == 0:
+            return []
+        freed = [int(b) for b in self.table[slot, :n]]
+        self.free_list.extend(freed)
+        self.free_list.sort()
+        self.table[slot, :n] = NULL_BLOCK
+        self.pages[slot] = 0
+        return freed
+
+    def flat_index(self) -> np.ndarray:
+        """Flat pool-position index mapping every (slot, ring position)
+        through the block table: shape ``(max_batch * ring_len,)`` into a
+        pool leaf viewed as ``(..., capacity * block, ...)``."""
+        pos = np.arange(self.ring_len)
+        off = pos % self.block
+        page = pos // self.block
+        return (self.table[:, page] * self.block + off[None, :]).reshape(-1)
+
+    def check(self, occupied: Sequence[int]) -> None:
+        """Pool invariants: no leak, no double-allocation, free-count
+        conservation, null block never allocated, unoccupied slots own
+        nothing.  Raises AssertionError with a specific message."""
+        occ = set(occupied)
+        allocated: List[int] = []
+        for slot in range(self.table.shape[0]):
+            n = int(self.pages[slot])
+            row = self.table[slot]
+            assert np.all(row[n:] == NULL_BLOCK), \
+                f"slot {slot}: table entries beyond page count {n}: {row}"
+            if slot not in occ:
+                assert n == 0, f"unoccupied slot {slot} owns {n} blocks"
+            allocated.extend(int(b) for b in row[:n])
+        assert NULL_BLOCK not in allocated, "null block was allocated"
+        assert len(set(allocated)) == len(allocated), \
+            f"block double-allocated: {sorted(allocated)}"
+        assert self.free_list == sorted(set(self.free_list)), \
+            f"free list unsorted or duplicated: {self.free_list}"
+        assert not (set(self.free_list) & set(allocated)), \
+            "block both free and allocated"
+        assert len(self.free_list) + len(allocated) == self.capacity - 1, \
+            (f"block leak: {len(self.free_list)} free + {len(allocated)} "
+             f"allocated != capacity-1 = {self.capacity - 1}")
+
+
+class PagedSlotManager(SlotManager):
+    """SlotManager with a block-pool backing store.
+
+    Every public method keeps its base signature and semantics; the
+    moving parts are the ``cache`` property (materialize/re-page), the
+    allocation hooks (``ensure_chunk`` / prefill-insert / restore /
+    release), and the fragmentation gauge backends."""
+
+    def __init__(self, model: LM, max_batch: int, max_len: int, *,
+                 block_size: int,
+                 registry: Optional[MetricsRegistry] = None):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.block_size = block_size
+        super().__init__(model, max_batch, max_len, registry=registry)
+
+    # ----------------------------------------------------------- storage seam
+    def _init_storage(self, model: LM, max_batch: int, max_len: int) -> None:
+        template = model.init_cache(max_batch, max_len)
+        self.axes = model.cache_batch_axes(template)
+        self.page_axes = model.cache_page_axes(template)
+        flat, self._treedef = jax.tree_util.tree_flatten_with_path(template)
+        paxes = {tuple(p): ax for p, ax in jax.tree_util.tree_leaves_with_path(
+            self.page_axes, is_leaf=lambda x: x is None)}
+        baxes = {tuple(p): ax for p, ax in
+                 jax.tree_util.tree_leaves_with_path(self.axes)}
+        self._paths: List[Tuple] = []
+        self._dense_leaves: Dict[Tuple, jax.Array] = {}
+        self._pool_leaves: Dict[Tuple, jax.Array] = {}
+        self._pool_group: Dict[Tuple, int] = {}      # path -> ring length
+        self._null_pattern: Dict[Tuple, jax.Array] = {}
+        self._pools: Dict[int, BlockPool] = {}       # ring length -> pool
+        for path, leaf in flat:
+            key = tuple(path)
+            self._paths.append(key)
+            lax_ = paxes[key]
+            if lax_ is None:
+                self._dense_leaves[key] = leaf
+                continue
+            if baxes[key] != 1 or lax_ != 2 or leaf.ndim < 3:
+                raise ValueError(
+                    f"pageable leaf {key} must carry slots on axis 1 and "
+                    f"its ring on axis 2, got batch axis {baxes[key]}, "
+                    f"page axis {lax_}, shape {leaf.shape}")
+            s = int(leaf.shape[2])
+            pool = self._pools.get(s)
+            if pool is None:
+                pool = self._pools[s] = BlockPool(s, self.block_size,
+                                                  max_batch)
+            # empty-ring pattern: one block's worth of the freshly
+            # initialized leaf (pos = -1, zero k/v — uniform along the
+            # ring, so any window of it is "empty")
+            empty = leaf[:, 0, :pool.block]                 # (P, blk, tail)
+            self._null_pattern[key] = empty
+            reps = (1, pool.capacity) + (1,) * (empty.ndim - 2)
+            self._pool_leaves[key] = jnp.tile(empty, reps)
+            self._pool_group[key] = s
+        self._flat_idx: Dict[int, jax.Array] = {}    # ring length -> index
+        self._refresh_indices()
+
+    def _refresh_indices(self) -> None:
+        self._flat_idx = {s: jnp.asarray(pool.flat_index(), jnp.int32)
+                          for s, pool in self._pools.items()}
+
+    # ------------------------------------------------------- dense cache view
+    @property
+    def cache(self):
+        """Materialize the dense ``(periods, max_batch, S, ...)`` view the
+        engine and the base-class gather/scatter methods consume."""
+        leaves = []
+        for key in self._paths:
+            pool_leaf = self._pool_leaves.get(key)
+            if pool_leaf is None:
+                leaves.append(self._dense_leaves[key])
+                continue
+            s = self._pool_group[key]
+            idx = self._flat_idx[s]
+            view = jnp.take(pool_leaf, idx, axis=1)
+            shape = (pool_leaf.shape[0], self.max_batch, s) \
+                + pool_leaf.shape[2:]
+            leaves.append(view.reshape(shape))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    @cache.setter
+    def cache(self, new_cache) -> None:
+        """Re-page a dense view into the pool.  Uncovered ring positions
+        scatter into the null block (colliding writes carry equal values
+        when the view came from :meth:`cache`, arbitrary ones when it
+        came from a foreign snapshot) — so the null block is rewritten
+        with the empty pattern afterwards, unconditionally."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(new_cache)
+        if len(flat) != len(self._paths):
+            raise ValueError("cache pytree structure changed under the "
+                             "paged manager")
+        for path, leaf in flat:
+            key = tuple(path)
+            pool_leaf = self._pool_leaves.get(key)
+            if pool_leaf is None:
+                self._dense_leaves[key] = jnp.asarray(leaf).astype(
+                    self._dense_leaves[key].dtype)
+                continue
+            s = self._pool_group[key]
+            pool = self._pools[s]
+            idx = self._flat_idx[s]
+            flat_view = jnp.asarray(leaf).astype(pool_leaf.dtype).reshape(
+                (pool_leaf.shape[0], self.max_batch * s)
+                + pool_leaf.shape[2:])
+            pool_leaf = pool_leaf.at[:, idx].set(flat_view)
+            pool_leaf = pool_leaf.at[:, :pool.block].set(
+                self._null_pattern[key])
+            self._pool_leaves[key] = pool_leaf
+
+    # ------------------------------------------------------------- allocation
+    def _cover(self, slot: int, tokens: int) -> None:
+        changed = False
+        for pool in self._pools.values():
+            changed |= pool.cover(slot, tokens)
+        if changed:
+            self._refresh_indices()
+
+    def ensure_chunk(self, budget: int) -> None:
+        # +1: an overlapped admission's first sampled token is not in
+        # req.output yet, so the host length estimate can lag device
+        # lengths by one
+        for slot in self.occupied():
+            self._cover(slot, self._slot_tokens(slot) + int(budget) + 1)
+
+    def insert_from_prefill(self, slots: Sequence[int], rows: Sequence[int],
+                            cacheN) -> None:
+        for slot in slots:
+            req = self.slots[slot]
+            if req is None:
+                raise ValueError(f"prefill insert into ungranted slot {slot}")
+            self._cover(slot, min(self.max_len, len(req.prompt)))
+        super().insert_from_prefill(slots, rows, cacheN)
+
+    def restore(self, slot: int, snap: SlotSnapshot, req) -> None:
+        tokens = int(np.asarray(snap.cache_col["lengths"]).reshape(-1)[0])
+        self._cover(slot, min(self.max_len, tokens))
+        super().restore(slot, snap, req)
+
+    def release(self, slot: int) -> None:
+        super().release(slot)
+        changed = False
+        for s, pool in self._pools.items():
+            freed = pool.release(slot)
+            if not freed:
+                continue
+            changed = True
+            self._wipe_blocks(s, freed)
+        if changed:
+            self._refresh_indices()
+
+    def _wipe_blocks(self, ring_len: int, block_ids: Sequence[int]) -> None:
+        """Reset freed blocks to the empty pattern, preserving the pool
+        invariant that free blocks are always clean — a recycled block
+        must not leak its previous owner's ring entries into the next
+        owner's view."""
+        pool = self._pools[ring_len]
+        idx = jnp.asarray(np.concatenate(
+            [np.arange(b * pool.block, (b + 1) * pool.block)
+             for b in block_ids]), jnp.int32)
+        for key, s in self._pool_group.items():
+            if s != ring_len:
+                continue
+            empty = self._null_pattern[key]
+            reps = (1, len(block_ids)) + (1,) * (empty.ndim - 2)
+            self._pool_leaves[key] = self._pool_leaves[key].at[:, idx].set(
+                jnp.tile(empty, reps))
+
+    # -------------------------------------------------------------- integrity
+    def check_invariants(self) -> None:
+        """Assert every pool's block-accounting invariants (no leak, no
+        double-free, free-count conservation) — the property harness and
+        the smoke probe call this after every operation."""
+        occ = self.occupied()
+        for pool in self._pools.values():
+            pool.check(occ)
+
+    # ----------------------------------------------------------------- gauges
+    def blocks_free(self) -> int:
+        return sum(len(p.free_list) for p in self._pools.values())
+
+    def bytes_resident(self) -> int:
+        """Bytes committed to live state: allocated blocks + one null
+        block and the block table per group + per-slot (recurrent/conv/
+        cross-attn) columns of occupied slots.  This — not pool capacity
+        — is what tracks tokens in flight and what the fragmentation
+        trajectory plots."""
+        total = self.n_active() * self._per_slot_bytes
+        for s, pool in self._pools.items():
+            tok_b = self._ring_token_bytes[s]
+            n_alloc = int(pool.pages.sum())
+            total += (n_alloc + 1) * pool.block * tok_b    # +1: null block
+            total += 4 * pool.table.size                   # int32 table
+        return total
+
+
+def canonicalize_cache(cache, page_axes=None):
+    """Zero every KV-ring entry whose ``pos`` marks it invalid, so dense
+    and paged cache columns — which legitimately differ only in masked
+    garbage (dense prefill leaves token-0 copies, paged leaves the null
+    pattern) — compare bit-equal exactly when their *live* state is
+    bit-equal.  Works on device or host pytrees; ``lengths`` and
+    per-slot leaves pass through untouched."""
+    def canon_entry(entry):
+        if not (isinstance(entry, dict) and "pos" in entry):
+            return dict(entry) if isinstance(entry, dict) else entry
+        pos = np.asarray(entry["pos"])                   # (P, B, S)
+        valid = pos >= 0
+        out = {}
+        for name, leaf in entry.items():
+            arr = np.asarray(leaf)
+            if name == "pos" or arr.shape[:3] != pos.shape:
+                out[name] = arr
+                continue
+            mask = valid.reshape(valid.shape + (1,) * (arr.ndim - 3))
+            out[name] = np.where(mask, arr, np.zeros_like(arr))
+        return out
+
+    blocks = {k: canon_entry(v) for k, v in cache["blocks"].items()}
+    return {"blocks": blocks, "lengths": np.asarray(cache["lengths"])}
+
+
+def paged_cache_bytes(model: LM, max_batch: int, max_len: int,
+                      block_size: int, tokens_per_slot: float) -> int:
+    """Planner-side model of paged resident bytes at steady state: what
+    :meth:`PagedSlotManager.bytes_resident` would report with every slot
+    occupied at ``tokens_per_slot`` resident tokens.  Mirrors the
+    manager's accounting (per-slot state + allocated pages rounded up to
+    block granularity + null block + table per ring group) without
+    allocating any device memory — it walks ``cache_specs``."""
+    specs = model.cache_specs(max_batch, max_len)
+    paxes = {tuple(p): ax for p, ax in jax.tree_util.tree_leaves_with_path(
+        model.cache_page_axes(specs), is_leaf=lambda x: x is None)}
+    per_slot = 0
+    ring_tok: Dict[int, int] = {}
+    for path, spec in jax.tree_util.tree_leaves_with_path(specs):
+        lax_ = paxes[tuple(path)]
+        if lax_ is None:
+            per_slot += spec.nbytes // max_batch
+        else:
+            s = int(spec.shape[lax_])
+            ring_tok[s] = ring_tok.get(s, 0) + spec.nbytes // (max_batch * s)
+    total = max_batch * per_slot
+    for s, tok_b in ring_tok.items():
+        block = min(block_size, s)
+        n_pages = math.ceil(min(s, tokens_per_slot) / block)
+        total += max_batch * n_pages * block * tok_b
+        total += block * tok_b                             # null block
+        total += 4 * max_batch * math.ceil(s / block)      # int32 table
+    return total
+
+
+__all__ = ["PagedSlotManager", "BlockPool", "canonicalize_cache",
+           "paged_cache_bytes", "NULL_BLOCK"]

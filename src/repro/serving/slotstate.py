@@ -97,8 +97,9 @@ class SlotManager:
     def __init__(self, model: LM, max_batch: int, max_len: int,
                  registry: Optional[MetricsRegistry] = None):
         self.max_batch = max_batch
-        self.cache = model.init_cache(max_batch, max_len)
-        self.axes = model.cache_batch_axes(self.cache)
+        self.max_len = max_len
+        self._init_storage(model, max_batch, max_len)
+        self._init_byte_accounting(model)
         self.slots: List[Optional[object]] = [None] * max_batch
         # host mirrors of the per-slot device control vectors
         self.next_token = np.zeros((max_batch,), np.int32)
@@ -120,6 +121,93 @@ class SlotManager:
                            fn=lambda: float(self.n_active()))
         self.metrics.gauge("slots.free", "free decode slots",
                            fn=lambda: float(self.max_batch - self.n_active()))
+        # fragmentation gauges — shared names across dense/paged layouts so
+        # benchmarks sample one vocabulary; dense semantics: the whole
+        # cache is committed up front, so bytes_resident is constant and
+        # the waste is everything not covered by live tokens
+        self.metrics.gauge(
+            "slots.blocks_free", "free cache-pool blocks (0 under dense)",
+            fn=lambda: float(self.blocks_free()))
+        self.metrics.gauge(
+            "slots.bytes_resident", "cache bytes committed to slot state",
+            fn=lambda: float(self.bytes_resident()))
+        self.metrics.gauge(
+            "slots.padding_waste",
+            "committed cache bytes not backing live tokens",
+            fn=lambda: float(self.padding_waste()))
+
+    # ----------------------------------------------------------- storage seam
+    def _init_storage(self, model: LM, max_batch: int, max_len: int) -> None:
+        """Allocate the backing store.  The dense layout owns the cache
+        pytree directly; :class:`repro.serving.paged.PagedSlotManager`
+        overrides this to build block pools instead and serves ``cache``
+        as a materialized view property."""
+        self.cache = model.init_cache(max_batch, max_len)
+        self.axes = model.cache_batch_axes(self.cache)
+        self.page_axes = model.cache_page_axes(self.cache)
+
+    def ensure_chunk(self, budget: int) -> None:
+        """Hook called by the engine before each decode chunk of up to
+        ``budget`` ticks.  Dense layout: no-op (every slot's full column
+        is pre-committed).  Paged layout: extends each active slot's block
+        table to cover the chunk's ring writes."""
+
+    # -------------------------------------------------------- byte accounting
+    def _init_byte_accounting(self, model: LM) -> None:
+        """Precompute per-token / per-slot byte factors from the dense
+        leaf shapes: pageable leaves (KV rings) group by ring length S
+        (local-window rings saturate before full-length ones), everything
+        else is per-slot state.  Both layouts share these factors, so the
+        dense and paged fragmentation gauges are directly comparable."""
+        paxes = {tuple(p): ax for p, ax in jax.tree_util.tree_leaves_with_path(
+            self.page_axes, is_leaf=lambda x: x is None)}
+        self._ring_token_bytes: Dict[int, int] = {}   # ring length S -> bytes
+        self._per_slot_bytes = 0
+        self._dense_cache_bytes = 0
+        for path, spec in jax.tree_util.tree_leaves_with_path(
+                model.cache_specs(self.max_batch, self.max_len)):
+            nbytes = spec.nbytes
+            self._dense_cache_bytes += nbytes
+            lax_ = paxes[tuple(path)]
+            if lax_ is None:
+                self._per_slot_bytes += nbytes // self.max_batch
+            else:
+                s = int(spec.shape[lax_])
+                per_tok = nbytes // (self.max_batch * s)
+                self._ring_token_bytes[s] = (
+                    self._ring_token_bytes.get(s, 0) + per_tok)
+
+    def _slot_tokens(self, slot: int) -> int:
+        """Host-side estimate of a slot's current sequence length (prompt
+        + generated so far) — gauge precision, not scheduling truth."""
+        req = self.slots[slot]
+        if req is None:
+            return 0
+        return min(self.max_len, len(req.prompt) + len(req.output))
+
+    def useful_bytes(self) -> int:
+        """Bytes actually backing live tokens/state of occupied slots."""
+        total = 0
+        for slot in self.occupied():
+            toks = self._slot_tokens(slot)
+            total += self._per_slot_bytes
+            total += sum(min(s, toks) * tok_b
+                         for s, tok_b in self._ring_token_bytes.items())
+        return total
+
+    def tokens_in_flight(self) -> int:
+        """Total sequence tokens currently resident across occupied slots."""
+        return sum(self._slot_tokens(s) for s in self.occupied())
+
+    # fragmentation gauge backends (paged overrides all three)
+    def blocks_free(self) -> int:
+        return 0
+
+    def bytes_resident(self) -> int:
+        return self._dense_cache_bytes
+
+    def padding_waste(self) -> int:
+        return self.bytes_resident() - self.useful_bytes()
 
     # ------------------------------------------------------------ occupancy
     def free(self) -> List[int]:
@@ -139,6 +227,8 @@ class SlotManager:
         """Mark a slot occupied by ``req``.  ``next_token`` may be None
         when the first token is still on device (overlapped admission);
         the post-chunk refresh fills the host mirror."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"grant into occupied slot {slot}")
         self.slots[slot] = req
         self.active[slot] = True
         self.eos[slot] = -1 if req.eos_id is None else req.eos_id
@@ -148,6 +238,8 @@ class SlotManager:
             self.next_token[slot] = next_token
 
     def release(self, slot: int) -> None:
+        if self.slots[slot] is None:
+            raise ValueError(f"release of already-free slot {slot}")
         self.slots[slot] = None
         self.active[slot] = False
 
@@ -177,7 +269,19 @@ class SlotManager:
         snapshots on host.  Bit-identical to N sequential
         :meth:`snapshot` calls (``jnp.take`` then a host ``np.take`` per
         slot preserves every leaf's bytes), at one device round-trip
-        instead of N — a preemption burst costs one host sync."""
+        instead of N — a preemption burst costs one host sync.
+
+        An empty victim list is a no-op (no device round-trip); duplicate
+        or unoccupied victims are rejected — a duplicate would otherwise
+        snapshot one slot twice and double-requeue its request."""
+        slots = list(slots)
+        if not slots:
+            return []
+        if len(set(slots)) != len(slots):
+            raise ValueError(f"duplicate slots in snapshot_many: {slots}")
+        for s in slots:
+            if self.slots[s] is None:
+                raise ValueError(f"snapshot of unoccupied slot {s}")
         cols = jax.device_get(gather_slots(self.cache, self.axes,
                                            list(slots)))
         out = []
@@ -196,6 +300,8 @@ class SlotManager:
         and re-arm the control mirrors — the resume half.  No model call,
         no sampler-key consumption: the request decodes its next tick as
         if it had never left."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"restore into occupied slot {slot}")
         self._restores.inc()
         self.cache = scatter_slots(self.cache, self.axes, [slot],
                                    snap.cache_col)
@@ -219,3 +325,22 @@ class SlotManager:
         # historical keys preserved; extended counters live in .metrics
         return {"active": self.n_active(),
                 "free": self.max_batch - self.n_active()}
+
+
+def make_slot_manager(model: LM, max_batch: int, max_len: int, *,
+                      layout: str = "dense",
+                      registry: Optional[MetricsRegistry] = None
+                      ) -> SlotManager:
+    """Construct the slot manager for a ``ServingPlan.cache_layout``:
+    ``"dense"`` → :class:`SlotManager`, ``"paged:<block_size>"`` →
+    :class:`repro.serving.paged.PagedSlotManager` (imported lazily; it
+    depends on this module)."""
+    from repro.plan.plan import parse_cache_layout
+
+    block = parse_cache_layout(layout)
+    if block is None:
+        return SlotManager(model, max_batch, max_len, registry=registry)
+    from repro.serving.paged import PagedSlotManager
+
+    return PagedSlotManager(model, max_batch, max_len, block_size=block,
+                            registry=registry)

@@ -36,6 +36,57 @@ print("CELL_JSON=" + json.dumps(
 """
 
 
+# ---------------------------------------------------------------------------
+# tier2 paged-layout grid: dense ≡ paged across every serving-capable arch
+# the tier-1 paged tests do NOT already cover, times block sizes.  tier-1
+# pins rwkv6/qwen2.5/hymba (tests/test_paged_slotstate.py); this grid
+# sweeps the rest — sliding-window rings (gemma2/gemma3 pool by *two* ring
+# lengths), MoE routing, and starcoder2's GQA — under a longer open-loop
+# workload, asserting bit-identical schedules + clean pool invariants.
+# ---------------------------------------------------------------------------
+
+PAGED_TIER2_GRID = [
+    (arch, block)
+    for arch in ("gemma2-9b", "gemma3-12b", "starcoder2-15b",
+                 "granite-moe-1b-a400m", "qwen3-moe-30b-a3b")
+    for block in (4, 16)
+]
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("arch,block", PAGED_TIER2_GRID,
+                         ids=[f"{a}-b{b}" for a, b in PAGED_TIER2_GRID])
+def test_paged_dense_equivalence_grid(arch, block):
+    import jax
+
+    from repro.dist.sharding import Sharder
+    from repro.models.lm import build_model
+    from repro.serving import ServingEngine, VirtualClock, drive, \
+        make_workload
+    from repro.testing import reduced_config
+
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sharder = Sharder(None, {})
+    items = make_workload("poisson", rate=0.6, duration=24.0, seed=4,
+                          vocab_size=cfg.vocab_size, prompt_len=(2, 12),
+                          max_new_tokens=(2, 8))
+
+    def serve(layout):
+        eng = ServingEngine(model, params, sharder, max_batch=3,
+                            max_len=32, seed=13, cache_layout=layout)
+        reqs = drive(eng, [i for i in items], VirtualClock())
+        return eng, [(r.uid, r.output, r.t_admit, r.t_first, r.t_done)
+                     for r in reqs]
+
+    eng_d, sched_d = serve("dense")
+    eng_p, sched_p = serve(f"paged:{block}")
+    assert sched_d == sched_p
+    assert eng_d.stats() == eng_p.stats()
+    eng_p.sm.check_invariants()
+
+
 @pytest.mark.tier2
 @pytest.mark.parametrize("arch,shape", GRID,
                          ids=[f"{a}-{s}" for a, s in GRID])

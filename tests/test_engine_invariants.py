@@ -12,18 +12,25 @@ from repro.serving.sampler import SamplerConfig
 from repro.testing import reduced_config
 
 
-@pytest.fixture(scope="module")
-def setup():
+# Every invariant in this module runs against BOTH cache layouts by
+# construction: the module fixture is parameterized over cache_layout, and
+# _engine() threads it into every engine it builds (PR 7 — the paged
+# backing store promises dense-identical behaviour, so the whole file is
+# its regression net).
+@pytest.fixture(scope="module", params=("dense", "paged:8"),
+                ids=("dense", "paged8"))
+def setup(request):
     cfg = reduced_config("rwkv6-1.6b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params, Sharder(None, {})
+    return cfg, model, params, Sharder(None, {}), request.param
 
 
 def _engine(setup, **kw):
     cfg, model, params = setup[:3]
     kw.setdefault("max_batch", 2)
     kw.setdefault("max_len", 32)
+    kw.setdefault("cache_layout", setup[4])
     return ServingEngine(model, params, setup[3], **kw)
 
 

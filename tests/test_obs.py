@@ -326,6 +326,81 @@ def test_reset_telemetry_covers_the_whole_registry(setup):
     assert eng.live.snapshot()["completed"] == 0
 
 
+_FRAG_COUNTERS = {"blocks_free", "bytes_resident", "padding_waste"}
+
+
+def test_dense_traces_carry_no_fragmentation_counters(setup):
+    """Byte-stability half of the PR-7 gauge wiring: dense engines emit
+    exactly the pre-paged event vocabulary, so every previously-committed
+    trace file's bytes are untouched by the new counter tracks."""
+    tr, _, _, _ = _traced_run(setup)
+    assert not {e.name for e in tr.events} & _FRAG_COUNTERS
+    check_trace(tr.to_chrome())
+
+
+def test_paged_traces_add_fragmentation_counters_deterministically(setup):
+    """Paged engines emit the three fragmentation counter tracks, the
+    schema validator accepts them, and same-seed runs stay
+    byte-identical (the determinism contract extends to the new
+    tracks)."""
+    tr1, eng, _, _ = _traced_run(setup, cache_layout="paged:8")
+    tr2, _, _, _ = _traced_run(setup, cache_layout="paged:8")
+    assert tr1.dumps() == tr2.dumps()
+    check_trace(tr1.to_chrome())
+    assert _FRAG_COUNTERS <= {e.name for e in tr1.events}
+    # the tracks carry the gauge values the registry serves
+    assert "slots.bytes_resident" in eng.metrics
+    resident = [e.args["bytes_resident"] for e in tr1.events
+                if e.name == "bytes_resident"]
+    assert resident and all(v >= 0 for v in resident)
+
+
+@pytest.mark.parametrize("layout", ("dense", "paged:8"))
+def test_fragmentation_gauges_registered_and_consistent(setup, layout):
+    """The three slots.* fragmentation gauges are registered in the
+    engine's shared MetricsRegistry under both layouts and satisfy
+    resident = useful + waste; dense resident is the constant worst-case
+    commitment, paged resident tracks occupancy."""
+    cfg, model, params, sharder = setup
+    eng = ServingEngine(model, params, sharder, max_batch=2, max_len=32,
+                        cache_layout=layout)
+    snap = eng.metrics.snapshot()
+    for name in ("slots.blocks_free", "slots.bytes_resident",
+                 "slots.padding_waste"):
+        assert name in snap
+    empty_resident = eng.sm.bytes_resident()
+    eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    eng.step()
+    assert eng.sm.bytes_resident() == \
+        eng.sm.useful_bytes() + eng.sm.padding_waste()
+    if layout == "dense":
+        assert eng.sm.bytes_resident() == empty_resident  # constant
+    else:
+        assert eng.sm.bytes_resident() > empty_resident   # tracks load
+    eng.run()
+
+
+def test_aggregate_metrics_block_untouched_by_gauges(setup):
+    """The committed BENCH ``metrics`` blocks never mention the gauges:
+    aggregate() output is a pure function of the request set, identical
+    whether the serving engine was dense or paged."""
+    from repro.serving import metrics as smetrics
+
+    def one(layout):
+        cfg, model, params, sharder = setup
+        eng = ServingEngine(model, params, sharder, max_batch=2,
+                            max_len=32, cache_layout=layout)
+        items = profile_items(_PROFILE, vocab_size=cfg.vocab_size, seed=0)
+        reqs = drive(eng, items, VirtualClock())
+        return smetrics.aggregate(reqs, ticks=eng.ticks,
+                                  util_history=eng.util_history)
+
+    agg_d, agg_p = one("dense"), one("paged:8")
+    assert agg_d == agg_p
+    flat = json.dumps(agg_d)
+    assert "blocks_free" not in flat and "bytes_resident" not in flat
+
+
 def test_fit_profile_from_engine_trace_matches_offered_traffic(setup):
     tracer, _, _, reqs = _traced_run(setup)
     p = fit_profile(tracer, duration=_PROFILE.duration)

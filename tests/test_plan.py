@@ -88,6 +88,9 @@ def test_plan_validate_rejects_bad_values():
         dict(buckets=(16, 8, 63)),               # not increasing
         dict(buckets=(8, 16, 32)),               # does not end at max_len-1
         dict(temperature=-1.0),
+        dict(cache_layout="sparse"),             # unknown layout
+        dict(cache_layout="paged:0"),            # block must be >= 1
+        dict(cache_layout="paged:65"),           # block exceeds max_len
     ]
     import dataclasses
     for kw in bad:
@@ -178,6 +181,87 @@ def test_candidate_bucket_sets_fit_workload():
     assert sets[0] is None                       # pow2 default always there
     for bs in sets[1:]:
         assert bs[-1] == 63 and list(bs) == sorted(set(bs))
+
+
+# ---------------------------------------------------------------------------
+# Cache-layout search (dense vs. paged)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_cache_layout_grammar():
+    from repro.plan.plan import parse_cache_layout
+
+    assert parse_cache_layout("dense") is None
+    assert parse_cache_layout("paged:16") == 16
+    assert parse_cache_layout("paged:1") == 1
+    for bad in ("sparse", "paged", "paged:", "paged:x", "paged:0",
+                "paged:-4", "paged:016", "PAGED:16"):
+        with pytest.raises(ValueError):
+            parse_cache_layout(bad)
+
+
+def test_candidate_cache_layouts_dense_first_deduped():
+    from repro.plan import planner
+
+    lays = planner.candidate_cache_layouts(64, (32, 8, 8, 100, 0))
+    assert lays[0] == "dense"                    # tie-break winner
+    assert lays[1:] == ["paged:8", "paged:32"]   # sorted, deduped, in-range
+
+
+def test_cache_layout_bytes_paged_tracks_load():
+    """For an attention arch, paged bytes are far below dense at light
+    per-slot load and above dense at saturation (the per-page overhead
+    charge) — so the layout search has a real trade-off, and dense wins
+    once every ring would be fully allocated anyway."""
+    from repro.plan import planner
+
+    arch, mb, ml = "qwen2.5-14b", 4, 64
+    dense = planner.cache_layout_bytes(arch, mb, ml, "dense", 8.0)
+    light = planner.cache_layout_bytes(arch, mb, ml, "paged:8", 8.0)
+    full = planner.cache_layout_bytes(arch, mb, ml, "paged:8", float(ml))
+    assert light < dense < full
+    # a pure-recurrent arch has nothing to page: both layouts cost the
+    # per-slot state, so dense (enumerated first) wins the tie
+    d = planner.cache_layout_bytes("rwkv6-1.6b", mb, ml, "dense", 8.0)
+    p = planner.cache_layout_bytes("rwkv6-1.6b", mb, ml, "paged:8", 8.0)
+    assert p == d
+
+
+@pytest.mark.slow
+def test_autotune_layout_choice_and_provenance():
+    """The autotuner records the layout comparison in provenance and
+    picks paged for an attention arch under a light-tailed workload
+    (expected tokens far below max_len), dense for a pure-recurrent
+    arch (nothing to page — tie goes to dense)."""
+    from repro.plan import planner
+
+    wp = WorkloadProfile(rate=0.3, duration=6.0, prompt_len=(2, 6),
+                         max_new_tokens=(2, 4))
+    kw = dict(seed=1, max_len=64, max_batches=(2,), sync_everys=(1,),
+              probe_duration=6.0)
+    qwen = planner.autotune("qwen2.5-14b", wp, hw.DEFAULT, **kw)
+    assert qwen.cache_layout.startswith("paged:")
+    prov = qwen.provenance["autotune"]
+    assert prov["expected_tokens_per_slot"] <= 10.0
+    recorded = {e["layout"]: e["modeled_bytes"] for e in
+                prov["cache_layouts"]}
+    assert qwen.cache_layout == min(recorded, key=recorded.get)
+    assert recorded[qwen.cache_layout] < recorded["dense"]
+
+    rwkv = planner.autotune(ARCH, wp, hw.DEFAULT, **kw)
+    assert rwkv.cache_layout == "dense"
+
+
+def test_expected_tokens_per_slot_p95():
+    from repro.plan import planner
+    from repro.serving.workload import WorkloadItem
+
+    items = [WorkloadItem(t=0.0, prompt=[1] * p, max_new_tokens=4,
+                          eos_id=None, deadline=None)
+             for p in list(range(1, 20)) + [60]]
+    t = planner.expected_tokens_per_slot(items, max_len=32)
+    assert t == 23.0                     # p95 of prompt+4 capped at 32
+    assert planner.expected_tokens_per_slot([], max_len=32) == 32.0
 
 
 # ---------------------------------------------------------------------------

@@ -28,9 +28,14 @@ def test_sweep_cell_names_unique_and_dimensions_present():
         {("fcfs", False), ("edf", False), ("edf", True)}
     base = [c for c in SERVING_LOAD_SWEEP
             if c.policy == "fcfs" and not c.preempt
-            and c.prompt_dist == "uniform" and c.heavy_decode is None]
+            and c.prompt_dist == "uniform" and c.heavy_decode is None
+            and c.cache_layout == "dense"]
     assert all("/" not in c.name.replace(f"{c.arch}/", "", 1).replace(
         f"b{c.max_batch}/", "", 1) for c in base)   # historical names intact
+    # PR 7: paged cells ride along, tagged by layout, never renaming the
+    # dense twins they are compared against
+    paged = [c for c in SERVING_LOAD_SWEEP if c.cache_layout != "dense"]
+    assert paged and all(c.name.endswith("/paged16") for c in paged)
 
 
 def test_smoke_registry_guard_detects_drift(monkeypatch):
@@ -100,6 +105,87 @@ def test_committed_drift_cells_show_replan_beating_stale():
     assert replan["plan"]["max_batch"] > stale["plan"]["max_batch"]
     assert (replan["metrics"]["slo"]["attainment"]
             > stale["metrics"]["slo"]["attainment"])
+
+
+def test_committed_paged_twin_bit_exact_and_capacity_rises():
+    """PR 7 acceptance, from the committed file alone: the paged twin of a
+    base-grid cell carries a byte-identical metrics block (the block-table
+    backing store changed no schedule), and the paged b8 capacity cells
+    show heavy-tail workloads admitted with less queueing than the b4
+    dense baseline on the same prompt distribution (virtual-clock
+    schedules depend only on scheduling parameters, so the cells are
+    directly comparable across archs)."""
+    import json
+    from pathlib import Path
+
+    doc = json.loads((Path(__file__).resolve().parent.parent /
+                      "BENCH_serving.json").read_text())
+    cells = {c["name"]: c for c in doc["cells"]}
+    dense = cells["qwen2.5-14b/b4/r1"]
+    paged = cells["qwen2.5-14b/b4/r1/paged16"]
+    assert paged["metrics"] == dense["metrics"]
+    assert paged["plan"]["cache_layout"] == "paged:16"
+    assert dense["plan"].get("cache_layout", "dense") == "dense"
+    for dist in ("lognormal", "bimodal"):
+        big = cells[f"qwen2.5-14b/b8/r1/{dist}/paged16"]
+        small = cells[f"rwkv6-1.6b/b4/r1/{dist}"]
+        assert big["metrics"]["completed"] == big["metrics"]["submitted"]
+        assert (big["metrics"]["queue_wait"]["p95"]
+                < small["metrics"]["queue_wait"]["p95"])
+
+
+def test_committed_fragmentation_trajectory_contracts():
+    """The committed BENCH_fragmentation.json memory trajectories uphold
+    the PR 7 contracts offline: identical tokens-in-flight under both
+    layouts (the schedule is layout-blind), paged bytes-resident never
+    above dense at any sample, and the recorded peaks/savings consistent
+    with their own trajectories."""
+    import json
+    from pathlib import Path
+
+    from benchmarks import fig4_fragmentation as f4
+
+    doc = json.loads((Path(__file__).resolve().parent.parent /
+                      "BENCH_fragmentation.json").read_text())
+    assert doc["schema"] == f4.SCHEMA
+    cells = doc["cells"]
+    assert len(cells) >= 4
+    for c in cells:
+        d, p = c["dense"], c["paged"]
+        assert d["tokens_in_flight"] == p["tokens_in_flight"]
+        assert all(pb <= db for pb, db in
+                   zip(p["bytes_resident"], d["bytes_resident"]))
+        assert d["peak_bytes"] == max(d["bytes_resident"])
+        assert p["peak_bytes"] == max(p["bytes_resident"])
+        assert c["peak_saving_bytes"] == d["peak_bytes"] - p["peak_bytes"]
+    # the attention-bearing heavy-tail cells actually save at peak; the
+    # pure-RNN cells tie exactly (recurrent state is never paged)
+    saved = {c["name"]: c["peak_saving_bytes"] for c in cells}
+    assert all(v > 0 for n, v in saved.items() if n.startswith("qwen"))
+    assert all(v == 0 for n, v in saved.items() if n.startswith("rwkv"))
+
+
+@pytest.mark.slow
+def test_paged_rerun_reproduces_committed_dense_metrics():
+    """Live half of the bit-exactness contract: re-running the committed
+    dense base cell with a paged:16 backing store reproduces the committed
+    dense metrics block byte-for-byte."""
+    import dataclasses
+    import json
+    from pathlib import Path
+
+    doc = json.loads((Path(__file__).resolve().parent.parent /
+                      "BENCH_serving.json").read_text())
+    committed = {c["name"]: c for c in doc["cells"]}
+    dense_cell = next(c for c in SERVING_LOAD_SWEEP
+                      if c.name == "qwen2.5-14b/b4/r1")
+    paged_cell = ServingLoadCell(
+        dense_cell.arch, dense_cell.family, dense_cell.max_batch,
+        dense_cell.rate,
+        plan=dataclasses.replace(dense_cell.plan, cache_layout="paged:16"))
+    fresh = sl.run_cell(paged_cell, duration=doc["duration"],
+                        seed=doc["seed"])
+    assert fresh["metrics"] == committed["qwen2.5-14b/b4/r1"]["metrics"]
 
 
 @pytest.mark.slow
