@@ -1,0 +1,362 @@
+"""Chaos benchmark: serving under deterministic fault storms.
+
+Fault tolerance turned into a regression-trackable benchmark: every cell
+replays a seeded Poisson workload (with per-request deadlines, so the
+SLO block is live) through the crash-restartable driver
+(:func:`repro.serving.faults.drive_resilient`) while a seeded fault
+storm (:func:`repro.serving.faults.make_storm`) poisons cache columns,
+drops readbacks, fails prefills, stalls slots, and kills the engine
+mid-run.  Two cell sections:
+
+* a *severity sweep* on the RWKV arch — the same workload under storms
+  of 2 / 4 / 8 faults, tracking how SLO attainment degrades as fault
+  pressure rises (gracefully: shed requests are accounted, completed
+  requests keep their token-for-token outputs);
+* an *arch x layout grid* — rwkv6 (pure recurrent), qwen2.5 (dense
+  attention), hymba (hybrid) under dense and ``paged:8`` cache layouts
+  at fixed storm severity, proving recovery (scrub / rollback /
+  watchdog eviction / checkpoint restart) is layout- and cache-family-
+  agnostic.  MoE archs are excluded on purpose: expert routing shares
+  capacity across the batch, so a poisoned lane can contaminate its
+  co-tenants' outputs (see benchmarks/README.md, "Fault model").
+
+Every cell embeds its resolved :class:`~repro.plan.ServingPlan` *and*
+its :class:`~repro.serving.faults.FaultPlan`, so any recorded storm can
+be replayed; the ``metrics`` and ``faults`` blocks are computed on the
+virtual clock and are a pure function of (cell, seed) — byte-identical
+across runs, diffable like every other BENCH trajectory.  The hard
+invariant, enforced at run time: ``lost`` is zero in every cell (each
+submitted request completes or is accountably shed — faults may cost
+latency and SLO, never requests).
+
+The *no-fault twin* guards the other direction: it re-serves a
+committed ``BENCH_serving.json`` cell through the ordinary driver and
+raises if its ``{plan, metrics}`` differ from the committed bytes —
+proving the fault machinery, merely by existing, perturbs nothing.
+
+  PYTHONPATH=src python -m benchmarks.chaos [--full] [--seed N] \\
+      [--out BENCH_chaos.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from benchmarks.common import Row
+from benchmarks.serving_load import _build
+from repro.checkpoint import CheckpointManager
+from repro.dist.sharding import make_sharder
+from repro.plan import WorkloadProfile, io as plan_io
+from repro.plan.plan import ServingPlan
+from repro.serving import (FaultInjector, ServingEngine, VirtualClock,
+                           drive_resilient, profile_items)
+from repro.serving import metrics as smetrics
+from repro.serving.faults import make_storm
+
+SCHEMA = "chaos/v1"
+DEFAULT_OUT = "BENCH_chaos.json"
+
+# (family tag, arch) — non-MoE on purpose, see module docstring
+CHAOS_ARCHS = (("rwkv", "rwkv6-1.6b"),
+               ("dense", "qwen2.5-14b"),
+               ("hybrid", "hymba-1.5b"))
+SEVERITIES = (2, 4, 8)          # storm sizes for the severity sweep
+GRID_SEVERITY = 4               # storm size for the arch x layout grid
+LAYOUTS = ("dense", "paged:8")
+MAX_BATCH = 4
+MAX_LEN = 64
+
+# the committed serving cell the no-fault twin re-serves byte-for-byte
+TWIN_CELL = "rwkv6-1.6b/b4/r1"
+_SERVING_DOC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            os.pardir, "BENCH_serving.json")
+
+
+def _chaos_plan(arch: str, layout: str, *, reduced: bool) -> ServingPlan:
+    return ServingPlan(arch=arch, reduced=reduced, max_batch=MAX_BATCH,
+                       max_len=MAX_LEN, cache_layout=layout,
+                       retry_budget=3, watchdog_ticks=4,
+                       provenance={"source": "benchmarks.chaos"}).resolve()
+
+
+def _workload(duration: float) -> WorkloadProfile:
+    return WorkloadProfile(kind="poisson", rate=0.8, duration=duration,
+                           prompt_len=(4, 12), max_new_tokens=(6, 10),
+                           deadline_slack=1.5)
+
+
+def _recovery_ticks(events: List[Dict]) -> Dict[str, float]:
+    """Mean ticks-to-recover per fault class, over recovered (non-shed)
+    request faults.  kill_engine recovers via restart, not via a
+    per-request event, so it reports under ``restarts`` instead."""
+    spans: Dict[str, List[int]] = {}
+    for e in events:
+        if e.get("recovered_at") is None or e.get("shed") or \
+                e["kind"] == "kill_engine":
+            continue
+        spans.setdefault(e["kind"], []).append(
+            int(e["recovered_at"]) - int(e["tick"]))
+    return {k: sum(v) / len(v) for k, v in sorted(spans.items())}
+
+
+def run_cell(family: str, arch: str, layout: str, n_faults: int, *,
+             duration: float = 32.0, seed: int = 0, reduced: bool = True,
+             _built=None) -> Dict[str, object]:
+    """One chaos cell: serve the deadline-carrying workload under a
+    seeded ``n_faults``-spec storm through the crash-restartable driver.
+    Raises RuntimeError if any request is lost — the invariant this
+    benchmark exists to track."""
+    cfg, model, params = _built or _build(arch, reduced)
+    plan = _chaos_plan(arch, layout, reduced=reduced)
+    storm = make_storm(duration=int(duration), seed=seed + n_faults,
+                       n_faults=n_faults, max_batch=MAX_BATCH)
+    sharder = make_sharder(cfg, None, plan.shard_mode)
+    engine = ServingEngine.from_plan(plan, params, model=model,
+                                     sharder=sharder, seed=seed)
+    items = profile_items(_workload(duration), vocab_size=cfg.vocab_size,
+                          seed=seed)
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    t0 = time.perf_counter()
+    try:
+        rep = drive_resilient(engine, items, VirtualClock(),
+                              injector=FaultInjector(storm),
+                              manager=CheckpointManager(ckpt_dir),
+                              checkpoint_every=8)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    wall_s = time.perf_counter() - t0
+    lost = rep.lost_uids()
+    if lost:
+        raise RuntimeError(f"chaos cell {arch}/{layout}/storm{n_faults} "
+                           f"LOST requests {lost}: the zero-loss "
+                           f"invariant is broken")
+    if layout != "dense":
+        rep.engine.sm.check_invariants()
+    agg = smetrics.aggregate(rep.requests, ticks=rep.engine.ticks,
+                             util_history=rep.engine.util_history)
+    fs = rep.engine.fault_stats()
+    return {
+        "name": f"{arch}/{layout}/storm{n_faults}",
+        "arch": arch,
+        "family": family,
+        "layout": layout,
+        "plan": plan_io.to_dict(plan),
+        "fault_plan": storm.to_dict(),   # replayable, like the plan
+        "metrics": agg,   # virtual-clock: deterministic for a fixed seed
+        "faults": {       # deterministic, same contract as metrics
+            "injected": int(fs["injected"]),
+            "quarantined": int(fs["quarantined"]),
+            "retries": int(fs["retries"]),
+            "shed": int(fs["shed"]),
+            "watchdog_evictions": int(fs["watchdog_evictions"]),
+            "restarts": rep.n_restarts,
+            "restart_ticks_lost": rep.restart_ticks_lost,
+            "lost": 0,    # enforced above; recorded so diffs say so
+            "mean_ticks_to_recover": _recovery_ticks(rep.fault_events),
+        },
+        "wall": {"seconds": wall_s},   # host-dependent, not deterministic
+    }
+
+
+def check_no_fault_twin(*, reduced: bool = True) -> Dict[str, object]:
+    """Re-serve the committed ``TWIN_CELL`` of BENCH_serving.json through
+    the ordinary (fault-free) path and fail loudly unless its ``plan``
+    and ``metrics`` blocks match the committed bytes — the guard that
+    the fault machinery cannot perturb a no-fault run."""
+    from benchmarks import serving_load
+    from repro.configs import SERVING_LOAD_SWEEP
+
+    with open(_SERVING_DOC) as f:
+        committed_doc = json.load(f)
+    committed = next(c for c in committed_doc["cells"]
+                     if c["name"] == TWIN_CELL)
+    cell = next(c for c in SERVING_LOAD_SWEEP if c.name == TWIN_CELL)
+    fresh = serving_load.run_cell(cell,
+                                  duration=committed_doc["duration"],
+                                  seed=committed_doc["seed"],
+                                  reduced=reduced)
+    for block in ("plan", "metrics"):
+        a = json.dumps(committed[block], sort_keys=True)
+        b = json.dumps(fresh[block], sort_keys=True)
+        if a != b:
+            raise RuntimeError(
+                f"no-fault twin diverged from committed BENCH_serving "
+                f"cell {TWIN_CELL} in its {block!r} block — the fault "
+                f"machinery perturbed the fault-free path")
+    return {"cell": TWIN_CELL, "matches": True}
+
+
+def sweep(fast: bool = True, *, seed: int = 0,
+          reduced: bool = True) -> Dict[str, object]:
+    """The full chaos sweep -> the BENCH_chaos.json document: severity
+    sweep + arch x layout grid + the no-fault twin verdict."""
+    duration = 32.0 if fast else 128.0
+    built: Dict[str, tuple] = {}
+    cells: List[Dict[str, object]] = []
+    specs: List[Tuple[str, str, str, int]] = []
+    for n in SEVERITIES:
+        specs.append(("rwkv", "rwkv6-1.6b", "dense", n))
+    for family, arch in CHAOS_ARCHS:
+        for layout in LAYOUTS:
+            if (arch, layout) == ("rwkv6-1.6b", "dense"):
+                continue   # the severity sweep already covers it
+            specs.append((family, arch, layout, GRID_SEVERITY))
+    for family, arch, layout, n in specs:
+        if arch not in built:
+            built[arch] = _build(arch, reduced)
+        cells.append(run_cell(family, arch, layout, n, duration=duration,
+                              seed=seed, reduced=reduced,
+                              _built=built[arch]))
+    return {
+        "schema": SCHEMA,
+        "seed": seed,
+        "mode": "fast" if fast else "full",
+        "reduced": reduced,
+        "duration": duration,
+        "no_fault_twin": check_no_fault_twin(reduced=reduced),
+        "cells": cells,
+    }
+
+
+def deterministic_view(doc: Dict[str, object]) -> Dict[str, object]:
+    """The seed-determined subset (drops wall timings); two same-seed
+    runs must agree on this exactly."""
+    return {
+        **{k: v for k, v in doc.items() if k != "cells"},
+        "cells": [{k: v for k, v in c.items() if k != "wall"}
+                  for c in doc["cells"]],
+    }
+
+
+def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def _check_fault_surface() -> None:
+    """CI guard for the fault subsystem (tier-1, via ``run.py --smoke``):
+
+    * the FaultSpec/FaultPlan JSON grammar round-trips and rejects junk;
+    * the serve CLI still exposes the fault/recovery flags;
+    * a tiny seeded poison-recover probe is byte-deterministic across two
+      runs AND token-identical to the same workload served fault-free —
+      the recovery-is-clean contract, proven loudly on every CI run.
+    """
+    from repro.launch.serve import build_parser
+    from repro.serving import FaultPlan, FaultSpec, drive
+
+    # grammar
+    plan = FaultPlan((FaultSpec("poison_slot", tick=3, mode="garbage",
+                                seed=1),
+                      FaultSpec("kill_engine", tick=9)))
+    if FaultPlan.from_dict(json.loads(json.dumps(plan.to_dict()))) != plan:
+        raise RuntimeError("FaultPlan no longer round-trips through JSON")
+    for bad in ({"faults": [{"kind": "melt_tpu", "tick": 1}]},
+                {"faults": [], "extra": 1},
+                {"schema": "fault_plan/v9", "faults": []}):
+        try:
+            FaultPlan.from_dict(bad)
+        except ValueError:
+            pass
+        else:
+            raise RuntimeError(f"FaultPlan.from_dict accepted junk {bad}")
+
+    # CLI surface
+    flags = {o for a in build_parser()._actions for o in a.option_strings}
+    needed = {"--fault-spec", "--checkpoint-dir", "--checkpoint-every",
+              "--retry-budget", "--watchdog-ticks"}
+    if not needed <= flags:
+        raise RuntimeError(f"launch/serve.py no longer exposes "
+                           f"{sorted(needed - flags)}")
+
+    # poison-recover probe: deterministic AND clean
+    cfg, model, params = _build("rwkv6-1.6b", reduced=True)
+    sharder = make_sharder(cfg, None, "decode")
+    items = profile_items(_workload(8.0), vocab_size=cfg.vocab_size, seed=0)
+    probe = FaultPlan((FaultSpec("poison_slot", tick=3, mode="nan"),))
+
+    def one_run():
+        eng = ServingEngine.from_plan(
+            _chaos_plan("rwkv6-1.6b", "dense", reduced=True), params,
+            model=model, sharder=sharder)
+        rep = drive_resilient(eng, items, VirtualClock(),
+                              injector=FaultInjector(probe))
+        if rep.lost_uids() or rep.shed_uids:
+            raise RuntimeError("poison-recover probe lost/shed a request")
+        return json.dumps({"out": [(r.uid, r.output) for r in rep.requests],
+                           "events": rep.fault_events,
+                           "stats": eng.fault_stats()}, sort_keys=True)
+
+    a, b = one_run(), one_run()
+    if a != b:
+        raise RuntimeError("same-seed chaos probe runs emitted different "
+                           "bytes; fault injection lost determinism")
+    clean = ServingEngine.from_plan(
+        _chaos_plan("rwkv6-1.6b", "dense", reduced=True), params,
+        model=model, sharder=sharder)
+    base = {r.uid: r.output for r in drive(clean, items, VirtualClock())}
+    got = {u: o for u, o in json.loads(a)["out"]}
+    if {int(k): v for k, v in got.items()} != base:
+        raise RuntimeError("poison-recover probe outputs differ from the "
+                           "fault-free run; recovery is not clean")
+
+
+def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
+    """benchmarks.run harness entry.  ``smoke`` checks the fault-plan
+    grammar, the CLI flags, and the poison-recover determinism/cleanness
+    probe, then serves one tiny storm cell — and never touches
+    BENCH_chaos.json (the tier-1 CI guard)."""
+    if smoke:
+        _check_fault_surface()
+        built = _build("rwkv6-1.6b", reduced=True)
+        doc = {"cells": [run_cell("rwkv", "rwkv6-1.6b", "dense", 3,
+                                  duration=10.0, _built=built)]}
+    else:
+        doc = sweep(fast=fast)
+        write(doc)
+    for c in doc["cells"]:
+        m, f = c["metrics"], c["faults"]
+        us_per_tok = (c["wall"]["seconds"] / m["tokens"] * 1e6
+                      if m["tokens"] else 0.0)
+        slo = (f" slo={m['slo']['attainment']:.2f}" if "slo" in m else "")
+        yield Row(
+            f"chaos/{c['name']}",
+            us_per_tok,
+            f"injected={f['injected']} quarantined={f['quarantined']}"
+            f" retries={f['retries']} shed={f['shed']}"
+            f" restarts={f['restarts']} lost=0" + slo)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="longer workloads (128 clock units vs 32)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--full-size", action="store_true",
+                    help="full-size configs (default: reduced)")
+    args = ap.parse_args()
+    doc = sweep(fast=not args.full, seed=args.seed,
+                reduced=not args.full_size)
+    write(doc, args.out)
+    print(f"wrote {args.out}: {len(doc['cells'])} cells "
+          f"(no-fault twin: {doc['no_fault_twin']})")
+    for c in doc["cells"]:
+        f, m = c["faults"], c["metrics"]
+        slo = (f"  slo {m['slo']['attainment']:.2f}" if "slo" in m else "")
+        rec = ", ".join(f"{k}={v:.1f}t"
+                        for k, v in f["mean_ticks_to_recover"].items())
+        print(f"  {c['name']:>28}  inj {f['injected']}  quar "
+              f"{f['quarantined']}  shed {f['shed']}  restarts "
+              f"{f['restarts']}{slo}  recover[{rec}]")
+
+
+if __name__ == "__main__":
+    main()

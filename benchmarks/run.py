@@ -22,6 +22,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    chaos,
     decode_hotpath,
     energy,
     fig4_fragmentation,
@@ -39,6 +40,7 @@ SUITES = {
     "roofline_table": roofline_table,
     "serving_load": serving_load,
     "decode_hotpath": decode_hotpath,
+    "chaos": chaos,
 }
 
 

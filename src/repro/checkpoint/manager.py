@@ -104,31 +104,86 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _validate_step(self, step: int, need_names=None) -> str:
+        """Up-front integrity check for a checkpoint step: the directory,
+        its manifest, and every leaf file the manifest (plus the caller's
+        target structure) declares must exist *before* any leaf is
+        loaded, so a missing or partially-written step surfaces as ONE
+        clear error listing everything absent — never a raw
+        ``FileNotFoundError`` halfway through a tree rebuild."""
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        if not os.path.isdir(d):
+            have = self.all_steps()
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found under {self.directory}"
+                + (f"; available steps: {have}" if have
+                   else "; no steps saved yet"))
+        mpath = os.path.join(d, "manifest.json")
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"checkpoint step {step} at {d} has no manifest.json — "
+                f"the save was interrupted before the atomic rename; "
+                f"delete the directory and restore an older step")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        declared = list(manifest.get("leaves", []))
+        missing = [n for n in declared
+                   if not os.path.exists(os.path.join(d, n + ".npy"))]
+        extra_needed = [n for n in (need_names or []) if n not in declared]
+        problems = []
+        if missing:
+            problems.append(f"manifest-declared leaf files missing on "
+                            f"disk: {missing}")
+        if extra_needed:
+            problems.append(f"target structure needs leaves the manifest "
+                            f"never saved: {extra_needed}")
+        if problems:
+            raise FileNotFoundError(
+                f"checkpoint step {step} at {d} is incomplete: "
+                + "; ".join(problems))
+        return d
+
+    @staticmethod
+    def _load_leaf(path: str, like) -> np.ndarray:
+        arr = np.load(path)
+        want = getattr(like, "dtype", None)
+        if want is None or arr.dtype == want:
+            return arr
+        if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
+            # extension dtypes (bfloat16, float8, ...) round-trip through
+            # .npy as raw void records; a bit-view restores them exactly
+            return arr.view(want)
+        return arr.astype(want)
+
     def restore(self, state_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Any:
         """Restore into the structure of ``state_like`` (abstract or
         concrete).  ``shardings``: matching tree of NamedShardings (or
-        None leaves) — arrays are device_put to them (resharding)."""
+        None leaves) — arrays are device_put to them (resharding).
+
+        The step is validated up front (directory + manifest + every
+        needed leaf file) so a partial checkpoint fails with one error
+        naming what is absent, before any state is touched."""
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.directory}")
-        d = os.path.join(self.directory, f"step_{step:010d}")
         leaves, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+        d = self._validate_step(step,
+                                need_names=[_leaf_name(p) for p, _ in leaves])
         sh_leaves = (jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: x is None)
             if shardings is not None else [None] * len(leaves))
         out = []
         for (path, like), sh in zip(leaves, sh_leaves):
-            arr = np.load(os.path.join(d, _leaf_name(path) + ".npy"))
-            if hasattr(like, "dtype") and arr.dtype != like.dtype:
-                arr = arr.astype(like.dtype)
+            arr = self._load_leaf(os.path.join(d, _leaf_name(path) + ".npy"),
+                                  like)
             out.append(jax.device_put(arr, sh) if sh is not None
                        else jax.numpy.asarray(arr))
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(state_like), out)
 
     def manifest(self, step: int) -> Dict:
-        d = os.path.join(self.directory, f"step_{step:010d}")
+        d = self._validate_step(step)
         with open(os.path.join(d, "manifest.json")) as f:
             return json.load(f)

@@ -86,6 +86,8 @@ _PLAN_FLAGS = (
     ("preempt", "preempt"),
     ("shed_late", "shed_late"),
     ("truncate_prompts", "truncate_prompts"),
+    ("retry_budget", "retry_budget"),
+    ("watchdog_ticks", "watchdog_ticks"),
 )
 
 # the pre-plan CLI defaults, applied only when no plan file is loaded so
@@ -197,6 +199,28 @@ def build_parser() -> argparse.ArgumentParser:
                     help="warn + drop the tail of prompts longer than "
                          "max_len-1 instead of rejecting them (useful when "
                          "replaying traces recorded on a larger engine)")
+    # fault tolerance (repro.serving.faults)
+    ap.add_argument("--retry-budget", type=int, default=None,
+                    help="recoveries per request before it is shed "
+                         "(plan default 3)")
+    ap.add_argument("--watchdog-ticks", type=int, default=None,
+                    help="evict a slot after this many ticks without "
+                         "progress (plan default 0 = watchdog off; "
+                         "required to serve a fault plan with stall_slot)")
+    ap.add_argument("--fault-spec", default=None, metavar="PATH",
+                    help="inject faults from a FaultPlan JSON "
+                         "(repro.serving.faults) and serve through the "
+                         "crash-restartable driver; virtual clock only — "
+                         "faults are tick-scheduled and restarts rewind "
+                         "time")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="journal engine state here every "
+                         "--checkpoint-every ticks while serving under "
+                         "--fault-spec (required when the fault plan "
+                         "contains kill_engine)")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="ticks between engine checkpoints under "
+                         "--checkpoint-dir (default 8)")
     # observability (repro.obs)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record a structured event trace (request "
@@ -306,6 +330,26 @@ def main() -> None:
         logging.getLogger("repro").setLevel(logging.DEBUG)
 
     plan = resolve_plan(args, parser)
+    fault_plan = None
+    if args.fault_spec:
+        from repro.serving import FaultPlan
+
+        if args.arrival == "batch":
+            parser.error("--fault-spec needs an arrival process "
+                         "(--arrival poisson/mmpp/trace): faults are "
+                         "scheduled on the replay clock")
+        if args.clock != "virtual":
+            parser.error("--fault-spec requires --clock virtual: faults "
+                         "are tick-scheduled and restarts rewind time")
+        fault_plan = FaultPlan.load(args.fault_spec)
+        if fault_plan.needs_watchdog() and plan.watchdog_ticks <= 0:
+            parser.error("the fault plan stalls slots but the watchdog is "
+                         "off; pass --watchdog-ticks N (stalled slots only "
+                         "recover by watchdog eviction)")
+        if fault_plan.needs_checkpoints() and not args.checkpoint_dir:
+            parser.error("the fault plan kills the engine; pass "
+                         "--checkpoint-dir DIR so it can restart from a "
+                         "checkpoint")
     print(f"plan: {plan.summary()}")
     if args.save_plan:
         plan_io.save_plan(plan.resolve(), args.save_plan)
@@ -383,7 +427,22 @@ def main() -> None:
                 last_print[0] = tick
                 print(live.line())
     t0 = time.time()
-    reqs = wl.drive(engine, items, clock, on_tick=on_tick)
+    report = None
+    if fault_plan is not None:
+        from repro.checkpoint import CheckpointManager
+        from repro.serving import FaultInjector, drive_resilient
+
+        manager = (CheckpointManager(args.checkpoint_dir)
+                   if args.checkpoint_dir else None)
+        report = drive_resilient(engine, items, clock,
+                                 injector=FaultInjector(fault_plan),
+                                 manager=manager,
+                                 checkpoint_every=args.checkpoint_every,
+                                 on_tick=on_tick)
+        engine = report.engine   # a kill_engine fault swaps the instance
+        reqs = report.requests
+    else:
+        reqs = wl.drive(engine, items, clock, on_tick=on_tick)
     dt = time.time() - t0
     # per-tick cost from busy time only: at low rates most of dt is idle
     # sleep between arrivals, which must not inflate the latency scaling
@@ -404,6 +463,20 @@ def main() -> None:
         print(f"scheduler: {s['preemptions']} preemptions / "
               f"{s['resumes']} resumes, {s['evicted_tokens']} tokens "
               f"evicted to host, {s['shed']} requests shed at submit")
+    if report is not None:
+        fs = engine.fault_stats()
+        print(f"faults: {fs['injected']:.0f} injected, "
+              f"{fs['quarantined']:.0f} quarantined "
+              f"({fs['watchdog_evictions']:.0f} by watchdog), "
+              f"{fs['retries']:.0f} retries, {fs['shed']:.0f} shed; "
+              f"{report.n_restarts} engine restarts "
+              f"({report.restart_ticks_lost} ticks replayed)")
+        lost = report.lost_uids()
+        if lost:
+            raise RuntimeError(f"lost requests (neither done nor shed): "
+                               f"{lost}")
+        print(f"recovery: {len(report.completed)} completed, "
+              f"{len(report.shed_uids)} shed, 0 lost")
     if args.clock == "wall":
         print(f"wall: {dt:.2f}s, {agg['tokens'] / dt:.1f} tok/s measured")
     _save_trace()

@@ -44,10 +44,14 @@ REQUEST_PID = 2         # one thread (track) per request uid
 
 CATS = ("request", "engine")
 PHASES = ("X", "i", "C", "M")
-REQUEST_SPANS = ("queued", "run")
-REQUEST_INSTANTS = ("submit", "first_token", "preempt", "resume", "shed")
+# "quarantine" / "fault" / "retry" events are emitted only when the fault
+# layer actually fires (injected fault or watchdog eviction), so every
+# no-fault trace stays byte-identical to the pre-fault-tolerance engine
+REQUEST_SPANS = ("queued", "run", "quarantine")
+REQUEST_INSTANTS = ("submit", "first_token", "preempt", "resume", "shed",
+                    "fault", "retry")
 ENGINE_SPANS = ("decode_chunk",)
-ENGINE_INSTANTS = ("prefill", "host_sync", "compile")
+ENGINE_INSTANTS = ("prefill", "host_sync", "compile", "fault")
 ENGINE_COUNTERS = ("util", "queue_depth",
                    # fragmentation tracks, emitted by paged-layout engines
                    # only (dense traces carry the first two exactly as
@@ -147,6 +151,33 @@ class Tracer:
                   deadline=req.deadline)
         self._add("first_token", "request", "i", req.t_first, req.uid,
                   uid=req.uid)
+
+    # ------------------------------------------------------- fault lifecycle
+    def request_fault(self, req, tick: int, kind: str,
+                      slot: Optional[int]) -> None:
+        """A fault hit this request (poisoned/dropped/stalled slot, failed
+        prefill): the moment the engine pulled it out of service."""
+        self._add("fault", "request", "i", tick, req.uid,
+                  uid=req.uid, kind=kind, slot=slot)
+
+    def request_retry(self, req, tick: int, retries: int) -> None:
+        """The faulted request was rolled back to its last good snapshot
+        (or to scratch) and re-queued, charged one retry."""
+        self._add("retry", "request", "i", tick, req.uid,
+                  uid=req.uid, retries=retries,
+                  tokens_kept=len(req.output))
+
+    def request_quarantine(self, req, t_fault: int, t_recovered: int) -> None:
+        """Span from the fault to the request being back in a slot (or
+        shed) — the per-request recovery time the chaos benchmark plots."""
+        self._add("quarantine", "request", "X", t_fault, req.uid,
+                  dur_ticks=t_recovered - t_fault, uid=req.uid,
+                  retries=req.retries)
+
+    def engine_fault(self, tick: int, kind: str, **args) -> None:
+        """Engine-scope fault instant (kill/drop_readback/fail_prefill and
+        the slot-fault injection points)."""
+        self._add("fault", "engine", "i", tick, 0, kind=kind, **args)
 
     # ---------------------------------------------------------- engine events
     def decode_chunk(self, tick: int, n_ticks: int, n_slots: int) -> None:

@@ -23,11 +23,22 @@ from repro.plan.plan import ServingPlan, WorkloadProfile
 PLAN_SCHEMA = "serving_plan/v1"
 
 
+# Fields omitted from the JSON when at their default value: the fault-
+# tolerance knobs postdate the committed BENCH cells, and emitting them
+# unconditionally would perturb every embedded plan dict byte-for-byte.
+# ``from_dict`` fills the defaults back in, so round-tripping is lossless.
+_OMIT_AT_DEFAULT = ("retry_budget", "watchdog_ticks")
+
+
 def to_dict(plan: ServingPlan) -> Dict[str, object]:
     """Plain-JSON dict of a plan, tagged with the schema id."""
     d = dataclasses.asdict(plan)
     if d["buckets"] is not None:
         d["buckets"] = list(d["buckets"])
+    defaults = {f.name: f.default for f in dataclasses.fields(ServingPlan)}
+    for name in _OMIT_AT_DEFAULT:
+        if d[name] == defaults[name]:
+            del d[name]
     return {"schema": PLAN_SCHEMA, **d}
 
 
@@ -66,6 +77,7 @@ def check_schema() -> None:
     probe = ServingPlan(arch="rwkv6-1.6b",
                         buckets=(8, 16, 63), max_len=64,
                         cache_layout="paged:16",
+                        retry_budget=5, watchdog_ticks=6,
                         tile_plans={"rwkv": {"bh": 64}},
                         provenance={"source": "schema-probe"}).validate()
     d = to_dict(probe)

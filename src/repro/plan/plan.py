@@ -212,6 +212,14 @@ class ServingPlan:
     top_k: int = 0
     # --- misc engine behavior -------------------------------------------
     truncate_prompts: bool = False
+    # --- fault tolerance -------------------------------------------------
+    # retry_budget: recoveries (rollback / re-prefill) a request may
+    # consume before it is shed; watchdog_ticks: evict a slot that made no
+    # progress for this many ticks (0 = watchdog off).  Both only matter
+    # when faults fire — serialization omits them at their defaults, so
+    # existing plan dicts and BENCH cells are unchanged (see plan.io).
+    retry_budget: int = 3
+    watchdog_ticks: int = 0
     # --- per-kernel tile plans + provenance ------------------------------
     tile_plans: Mapping[str, Mapping[str, object]] = dataclasses.field(
         default_factory=dict)
@@ -253,6 +261,13 @@ class ServingPlan:
                              f"got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"plan.top_k must be >= 0, got {self.top_k}")
+        if self.retry_budget < 0:
+            raise ValueError(f"plan.retry_budget must be >= 0, "
+                             f"got {self.retry_budget}")
+        if self.watchdog_ticks < 0:
+            raise ValueError(f"plan.watchdog_ticks must be >= 0 "
+                             f"(0 disables the watchdog), "
+                             f"got {self.watchdog_ticks}")
         from repro.serving.scheduler import SCHEDULERS, make_scheduler
         if self.policy not in SCHEDULERS:
             raise ValueError(f"plan.policy {self.policy!r} is not in the "
@@ -311,6 +326,10 @@ class ServingPlan:
             bits.append("no-overlap")
         if self.temperature > 0:
             bits.append(f"T={self.temperature:g}")
+        if self.retry_budget != 3:
+            bits.append(f"retry{self.retry_budget}")
+        if self.watchdog_ticks > 0:
+            bits.append(f"wd{self.watchdog_ticks}")
         return " ".join(bits)
 
 

@@ -1,4 +1,17 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    EngineKilled,
+    Request,
+    ServingEngine,
+)
+from repro.serving.faults import (  # noqa: F401
+    FAULT_KINDS,
+    FaultInjector,
+    FaultPlan,
+    FaultReport,
+    FaultSpec,
+    drive_resilient,
+    make_storm,
+)
 from repro.serving.metrics import (  # noqa: F401
     aggregate,
     format_summary,

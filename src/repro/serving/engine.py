@@ -62,10 +62,9 @@ loop, so the fused path is a pure wall-clock optimization.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import logging
 from functools import partial
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,9 +77,21 @@ from repro.obs.trace import Tracer
 from repro.plan.plan import MIN_BUCKET, ServingPlan
 from repro.serving.sampler import SamplerConfig, split_and_sample
 from repro.serving.scheduler import POLICIES, Scheduler, make_scheduler
-from repro.serving.slotstate import SlotSnapshot, make_slot_manager
+from repro.serving.slotstate import SlotSnapshot, gather_slots, \
+    make_slot_manager, scatter_slots
 
 log = logging.getLogger("repro.serving")
+
+
+class EngineKilled(RuntimeError):
+    """Raised by ``step()`` when an attached fault injector schedules a
+    ``kill_engine`` fault at the current tick — the process-crash stand-in
+    for the crash-restart path.  ``faults.drive_resilient`` catches it,
+    restores a fresh engine from the last checkpoint, and replays."""
+
+    def __init__(self, tick: int):
+        super().__init__(f"engine killed by fault injector at tick {tick}")
+        self.tick = tick
 
 
 @dataclasses.dataclass
@@ -98,6 +109,8 @@ class Request:
     truncated: bool = False       # prompt tail dropped (truncate_prompts)
     capped: bool = False          # cache can't hold max_new_tokens: the
     #                               output will stop short (length cut)
+    retries: int = 0              # fault recoveries consumed (rollback /
+    #                               re-prefill); shed past plan.retry_budget
     # tick stamps (engine tick counter; see serving.metrics for semantics)
     t_submit: int = 0             # tick at submission
     t_admit: Optional[int] = None   # tick the prefill ran (slot granted)
@@ -109,6 +122,28 @@ class Request:
     t_resumes: List[int] = dataclasses.field(default_factory=list)
     saved: Optional[SlotSnapshot] = dataclasses.field(
         default=None, repr=False)   # host state while evicted
+
+
+#: Request fields journaled by ``ServingEngine.checkpoint()`` — everything
+#: except ``saved``, whose cache column travels in the array tree (the
+#: paired ``next_token`` scalar rides as ``saved_next_token``).
+_REQ_FIELDS = ("uid", "prompt", "max_new_tokens", "eos_id", "deadline",
+               "output", "done", "shed", "truncated", "capped", "retries",
+               "t_submit", "t_admit", "t_first", "t_done",
+               "n_preempts", "t_preempts", "t_resumes")
+
+
+def _req_to_json(req: "Request") -> Dict[str, Any]:
+    d = {f: getattr(req, f) for f in _REQ_FIELDS}
+    if req.saved is not None:
+        d["saved_next_token"] = int(req.saved.next_token)
+    return d
+
+
+def _req_from_json(d: Dict[str, Any]) -> "Request":
+    d = dict(d)
+    d.pop("saved_next_token", None)
+    return Request(**d)
 
 
 def _is_reduced(cfg) -> bool:
@@ -263,6 +298,21 @@ class ServingEngine:
                                    "tokens already generated at eviction")
         self._c_shed = c("engine.shed",
                          "requests rejected at submit (admission control)")
+        # fault-tolerance counters: registered always (so reset_telemetry
+        # covers them), but surfaced via fault_stats() rather than stats()
+        # — no-fault runs keep their historical stats()/BENCH bytes
+        self._c_f_injected = c("faults.injected",
+                               "faults fired by the attached injector")
+        self._c_f_quarantined = c("faults.quarantined",
+                                  "slots quarantined (poison / dropped "
+                                  "readback / watchdog)")
+        self._c_f_retries = c("faults.retries",
+                              "request rollbacks (re-queued from the last "
+                              "good snapshot or re-prefilled)")
+        self._c_f_shed = c("faults.shed",
+                           "requests shed after exhausting retry_budget")
+        self._c_f_watchdog = c("faults.watchdog_evictions",
+                               "stuck slots evicted by the watchdog")
         self.metrics.gauge("engine.ticks", "virtual-clock tick counter",
                            fn=lambda: float(self._tick))
         self.finished: List[Request] = []   # completed Requests, in order
@@ -273,7 +323,26 @@ class ServingEngine:
         self._decode_compile_traced = False  # decode program built once
         self._pending: List[_PendingAdmit] = []  # overlapped admissions
         self._tick = 0
-        self._uid = itertools.count()
+        self._uid_next = 0   # plain int (not itertools.count): journaled
+        #                      by checkpoint() so restored engines mint
+        #                      identical uids for replayed submissions
+        # ---- fault tolerance (inert unless an injector is attached or
+        # ---- the plan enables the watchdog — see _fault_mode) ----------
+        self.retry_budget = int(plan.retry_budget)
+        self.watchdog_ticks = int(plan.watchdog_ticks)
+        self._injector = None                   # faults.FaultInjector
+        self.fault_events: List[Dict[str, Any]] = []
+        self._awaiting: Dict[int, Dict[str, Any]] = {}  # uid -> open event
+        self._recovery: Dict[int, Tuple[Optional[SlotSnapshot], int]] = {}
+        self._stalled: Set[int] = set()         # slots frozen by stall_slot
+        self._poison_outstanding: Set[int] = set()  # scribbled, not yet seen
+        self._last_progress = np.zeros((self.max_batch,), np.int64)
+        self._drop_readback = False             # armed: next chunk readback
+        #                                         is discarded wholesale
+        self._fail_prefill = False              # armed: next prefill call
+        #                                         fails before launch
+        self._prefill_blocked = False           # a prefill failed this tick
+        self.restored_from: Optional[Dict[str, Any]] = None
         self._key = jax.random.PRNGKey(seed)
         self._decode_many = jax.jit(
             partial(_decode_many, model, sharder, self.sampler,
@@ -395,9 +464,10 @@ class ServingEngine:
             log.warning("truncating prompt from %d to %d tokens "
                         "(max_len=%d)", len(prompt), limit, self.max_len)
             prompt, truncated = prompt[:limit], True
-        req = Request(next(self._uid), prompt, max_new_tokens, eos_id,
+        req = Request(self._uid_next, prompt, max_new_tokens, eos_id,
                       deadline=deadline, truncated=truncated,
                       t_submit=self._tick)
+        self._uid_next += 1
         # the `full` stop in the decode loop cuts generation at max(2,
         # max_len - len(prompt)) tokens (prefill token + decodes until the
         # cache fills): flag requests whose max_new_tokens cannot fit
@@ -489,6 +559,8 @@ class ServingEngine:
         False when idle."""
         budget = self.sync_every if max_ticks is None \
             else max(1, min(int(max_ticks), self.sync_every))
+        if self._injector is not None:
+            self._apply_due_faults()   # may raise EngineKilled
         n_instant = self._schedule()
         if self.tracer is not None:
             self.tracer.counter(self._tick, "queue_depth",
@@ -527,11 +599,26 @@ class ServingEngine:
             (n, toks, acts, dones, [p.first for p in self._pending]))
         n = int(n)
         self._c_host_syncs.inc()
-        for p, fv in zip(self._pending, firsts):
-            for req, row in zip(p.reqs, p.rows):
-                req.output.append(int(fv[row]))
-                self._c_total_tokens.inc()
+        # fault path: a dropped readback discards the whole chunk's tokens
+        # (and the overlapped first tokens riding on it) — every slot that
+        # decoded rolls back to its last recovery point
+        dropped = self._drop_readback and n > 0
+        self._drop_readback = False
+        if not dropped:
+            for p, fv in zip(self._pending, firsts):
+                for req, row in zip(p.reqs, p.rows):
+                    req.output.append(int(fv[row]))
+                    self._c_total_tokens.inc()
         self._pending = []
+        if dropped:
+            bad = [i for i in active_idx if self.sm.slots[i] is not None
+                   and self.sm.active[i]]
+        elif self._injector is not None and n > 0:
+            bad = self._scan_poisoned(active_idx)
+        else:
+            bad = []
+        bad_set = set(bad)
+        progressed: Set[int] = set()
         base = self._tick
         if self.tracer is not None:
             self.tracer.decode_chunk(base, n, len(active_idx))
@@ -539,9 +626,10 @@ class ServingEngine:
             n_active = 0
             for i in active_idx:
                 req = self.sm.slots[i]
-                if req is None or not acts[j, i]:
+                if req is None or not acts[j, i] or i in bad_set:
                     continue
                 n_active += 1
+                progressed.add(i)
                 req.output.append(int(toks[j, i]))
                 self._c_total_tokens.inc()
                 if dones[j, i]:
@@ -553,8 +641,17 @@ class ServingEngine:
         self._tick += n
         if self.tracer is not None:
             self.tracer.host_sync(self._tick)
-        # refresh the host mirrors from the authoritative slot table
-        self.sm.refresh_after_chunk(toks[n - 1])
+        if n > 0:
+            # refresh the host mirrors from the authoritative slot table
+            self.sm.refresh_after_chunk(toks[n - 1])
+        else:
+            # fault mode only: every occupied slot is stalled, so the
+            # fused loop ran zero ticks.  Time still advances one tick so
+            # the watchdog can reach its threshold and evict.
+            self._observe_tick(self._tick, n_instant / self.max_batch)
+            self._tick += 1
+        if self._fault_mode:
+            self._fault_epilogue(bad, dropped, progressed)
         log.debug("chunk of %d ticks -> tick %d: util=%.2f queued=%d "
                   "completed=%d total_tokens=%d syncs=%d", n, self._tick,
                   self.util_history[-1], len(self.scheduler), self.completed,
@@ -565,6 +662,8 @@ class ServingEngine:
     def _finish(self, req: Request, tick: int) -> None:
         req.done = True
         req.t_done = tick
+        if self._fault_mode:
+            self._recovery.pop(req.uid, None)
         self._c_completed.inc()
         self.finished.append(req)
         if self.tracer is not None:
@@ -590,6 +689,239 @@ class ServingEngine:
                                     self.sm.bytes_resident())
                 self.tracer.counter(tick, "padding_waste",
                                     self.sm.padding_waste())
+
+    # -------------------------------------------------------- fault tolerance
+    @property
+    def _fault_mode(self) -> bool:
+        """True when any recovery machinery must run: an injector is
+        attached or the plan's watchdog is enabled.  Everything in this
+        section is gated on it, so plain engines keep a byte-identical
+        schedule, telemetry, and trace."""
+        return self._injector is not None or self.watchdog_ticks > 0
+
+    def attach_injector(self, injector) -> None:
+        """Attach a :class:`repro.serving.faults.FaultInjector`; its due
+        faults are applied at the top of every :meth:`step`."""
+        if injector.plan.needs_watchdog() and self.watchdog_ticks <= 0:
+            raise ValueError(
+                "fault plan contains stall_slot faults but the engine's "
+                "watchdog is off; set plan.watchdog_ticks > 0 so stalled "
+                "requests can be evicted and retried")
+        self._injector = injector
+
+    def fault_stats(self) -> Dict[str, float]:
+        """Fault/recovery counter view — separate from :meth:`stats` so
+        no-fault runs keep their historical stats() keys byte-for-byte."""
+        return self.metrics.view({
+            "injected": "faults.injected",
+            "quarantined": "faults.quarantined",
+            "retries": "faults.retries",
+            "shed": "faults.shed",
+            "watchdog_evictions": "faults.watchdog_evictions",
+        })
+
+    def _apply_due_faults(self) -> None:
+        """Fire every fault the injector scheduled at or before the current
+        tick.  Slot faults (poison/stall) stay armed while no slot is
+        occupied — they need a victim — and fall back to the lowest
+        occupied slot when their nominal target is empty, so a fault plan
+        written against one workload stays meaningful on another."""
+        for idx, spec in self._injector.due(self._tick):
+            if spec.kind == "kill_engine":
+                self._injector.fire(idx, self._tick)
+                self._c_f_injected.inc()
+                self.fault_events.append(
+                    {"kind": "kill_engine", "tick": self._tick,
+                     "uid": None, "slot": None, "recovered_at": None})
+                if self.tracer is not None:
+                    self.tracer.engine_fault(self._tick, "kill_engine")
+                raise EngineKilled(self._tick)
+            if spec.kind == "drop_readback":
+                self._injector.fire(idx, self._tick)
+                self._c_f_injected.inc()
+                self._drop_readback = True
+                if self.tracer is not None:
+                    self.tracer.engine_fault(self._tick, "drop_readback")
+            elif spec.kind == "fail_prefill":
+                self._injector.fire(idx, self._tick)
+                self._c_f_injected.inc()
+                self._fail_prefill = True
+            else:   # poison_slot / stall_slot need an occupied victim
+                occ = self.sm.occupied()
+                if not occ:
+                    continue   # not fired: stays due for a later tick
+                slot = (spec.slot if spec.slot in occ else occ[0])
+                self._injector.fire(idx, self._tick)
+                self._c_f_injected.inc()
+                if self.tracer is not None:
+                    self.tracer.engine_fault(self._tick, spec.kind,
+                                             slot=slot)
+                if spec.kind == "poison_slot":
+                    self._poison(slot, spec)
+                else:
+                    self._stalled.add(slot)
+                    self.sm.active[slot] = False
+
+    def _poison(self, slot: int, spec) -> None:
+        """Corrupt ``slot``'s cache column in place: overwrite every float
+        leaf with NaN (``mode="nan"``) or seeded large-magnitude garbage
+        salted with ±Inf (``mode="garbage"``) — both detectable by the
+        non-finite guard scan after the next chunk."""
+        col = jax.device_get(gather_slots(self.sm.cache, self.sm.axes,
+                                          [slot]))
+        rng = np.random.default_rng(spec.seed)
+
+        def scribble(a):
+            a = np.asarray(a)
+            if not jnp.issubdtype(a.dtype, jnp.floating):
+                return a
+            if spec.mode == "nan":
+                return np.full_like(a, np.nan)
+            g = (rng.standard_normal(a.shape) * 1e30).astype(np.float32)
+            g[rng.uniform(size=a.shape) < 0.25] = np.inf
+            g.reshape(-1)[0] = -np.inf   # at least one non-finite value
+            return g.astype(a.dtype)
+
+        bad = jax.tree.map(scribble, col)
+        self.sm.cache = scatter_slots(self.sm.cache, self.sm.axes, [slot],
+                                      bad)
+        self._poison_outstanding.add(slot)
+
+    def _scan_poisoned(self, active_idx: List[int]) -> List[int]:
+        """Per-slot non-finite guard over every float cache leaf, reduced
+        on device to one (max_batch,) flag vector — runs only while a
+        poison is outstanding, so fault-free chunks pay nothing."""
+        self._poison_outstanding = {
+            s for s in self._poison_outstanding
+            if self.sm.slots[s] is not None}
+        if not self._poison_outstanding:
+            return []
+        flags = np.zeros((self.max_batch,), bool)
+        cache = self.sm.cache
+        checks = []
+        for leaf, ax in zip(jax.tree.leaves(cache),
+                            jax.tree.leaves(self.sm.axes)):
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                continue
+            red = tuple(d for d in range(leaf.ndim) if d != ax)
+            checks.append(jnp.any(~jnp.isfinite(leaf), axis=red))
+        for bad in jax.device_get(checks):
+            flags |= np.asarray(bad)
+        caught = [i for i in active_idx
+                  if flags[i] and self.sm.slots[i] is not None]
+        self._poison_outstanding -= set(caught)
+        return caught
+
+    def _quarantine(self, slot: int, tick: int, kind: str) -> None:
+        """Pull a bad slot out of service: scrub the column (no residue
+        for the next tenant), release the slot, roll the request back."""
+        req = self.sm.slots[slot]
+        self._c_f_quarantined.inc()
+        if kind == "watchdog":
+            self._c_f_watchdog.inc()
+        self.sm.scrub([slot])
+        self.sm.release(slot)
+        self._stalled.discard(slot)
+        self._poison_outstanding.discard(slot)
+        self._rollback(req, tick, kind, slot)
+
+    def _rollback(self, req: Request, tick: int, kind: str,
+                  slot: Optional[int] = None) -> None:
+        """Re-queue ``req`` from its last good recovery point (or from
+        scratch when none exists), charging one retry; past the budget the
+        request is shed — the engine never emits tokens it cannot vouch
+        for.  Emits the fault event + trace instants."""
+        event = {"kind": kind, "tick": tick, "uid": req.uid, "slot": slot,
+                 "recovered_at": None}
+        self.fault_events.append(event)
+        self._awaiting[req.uid] = event
+        if self.tracer is not None:
+            self.tracer.request_fault(req, tick, kind, slot)
+        req.retries += 1
+        rp = self._recovery.get(req.uid)
+        if req.retries > self.retry_budget:
+            req.shed = True
+            event["shed"] = True
+            event["recovered_at"] = tick
+            self._awaiting.pop(req.uid, None)
+            self._recovery.pop(req.uid, None)
+            self._c_f_shed.inc()
+            if self.tracer is not None:
+                self.tracer.request_quarantine(req, tick, tick)
+                self.tracer.request_shed(req, tick)
+            if self.live is not None:
+                self.live.observe_request(req, tick)
+            log.debug("shed req %d at tick %d: retry budget %d exhausted "
+                      "(%s)", req.uid, tick, self.retry_budget, kind)
+            return
+        self._c_f_retries.inc()   # counts re-queues, not the shedding try
+        if rp is not None:
+            snap, n_out = rp
+            del req.output[n_out:]
+            req.saved = snap
+        else:
+            del req.output[:]
+            req.saved = None
+        self.scheduler.requeue_front(req)
+        if self.tracer is not None:
+            self.tracer.request_retry(req, tick, req.retries)
+        log.debug("rolled back req %d at tick %d (%s, retry %d/%d, "
+                  "%d tokens kept)", req.uid, tick, kind, req.retries,
+                  self.retry_budget, len(req.output))
+
+    def _mark_recovered(self, req: Request) -> None:
+        """A rolled-back request made it back into a slot: close its open
+        fault event and emit the quarantine span (fault tick -> now)."""
+        event = self._awaiting.pop(req.uid, None)
+        if event is None:
+            return
+        event["recovered_at"] = self._tick
+        if self.tracer is not None:
+            self.tracer.request_quarantine(req, event["tick"], self._tick)
+
+    def _fault_epilogue(self, bad: List[int], dropped: bool,
+                        progressed: Set[int]) -> None:
+        """End-of-chunk fault bookkeeping: quarantine flagged slots, run
+        the watchdog, re-assert stalls over the refreshed mirrors, and
+        refresh every survivor's recovery point."""
+        for i in progressed:
+            self._last_progress[i] = self._tick
+        for i in bad:
+            if self.sm.slots[i] is not None:
+                self._quarantine(i, self._tick,
+                                 "drop_readback" if dropped else "poison")
+        # refresh_after_chunk derived `active` from occupancy: re-freeze
+        # slots the injector stalled (their request is wedged, not done)
+        for i in list(self._stalled):
+            if self.sm.slots[i] is None:
+                self._stalled.discard(i)
+            else:
+                self.sm.active[i] = False
+        if self.watchdog_ticks > 0:
+            for i in self.sm.occupied():
+                if self._tick - self._last_progress[i] >= self.watchdog_ticks:
+                    self._quarantine(i, self._tick, "watchdog")
+        self._refresh_recovery()
+
+    def _refresh_recovery(self) -> None:
+        """Snapshot every occupied slot as its request's last *good*
+        recovery point (the guard scan / quarantine above already removed
+        every slot known bad, so what remains is vouched-for state).
+
+        Stalled slots are skipped: the fused chunk advances *every*
+        lane's device state (only the token/remaining writebacks are
+        masked by ``active``), so a wedged slot's column silently drifts
+        from its frozen outputs — its recovery point must stay the last
+        pre-stall snapshot or the watchdog rollback resumes from state
+        the request never emitted tokens for."""
+        occ = [i for i in self.sm.occupied() if i not in self._stalled]
+        if not occ:
+            return
+        snaps = self.sm.snapshot_many(occ)
+        self._c_host_syncs.inc()
+        for slot, snap in zip(occ, snaps):
+            req = self.sm.slots[slot]
+            self._recovery[req.uid] = (snap, len(req.output))
 
     def _merge_pending_tokens(self):
         """Decode-chunk input tokens: the host mirror, with overlapped
@@ -684,6 +1016,9 @@ class ServingEngine:
                 req.saved = None
                 req.t_resumes.append(self._tick)
                 self._c_resumes.inc()
+                if self._fault_mode:
+                    self._last_progress[slot] = self._tick
+                    self._mark_recovered(req)
                 if self.tracer is not None:
                     self.tracer.request_resume(req, self._tick, slot)
                 log.debug("resumed req %d into slot %d at tick %d",
@@ -709,6 +1044,12 @@ class ServingEngine:
                                    or r.max_new_tokens == 1 for r in fresh))
             for S, reqs in grouped:
                 n_instant += self._prefill_group(S, reqs, free, overlap)
+            if self._prefill_blocked:
+                # a fault just failed the prefill call and requeued its
+                # group; stop admitting this tick or we'd pick the same
+                # requests again in an endless same-tick loop
+                self._prefill_blocked = False
+                break
         return n_instant
 
     def _prefill_group(self, S: int, reqs: List[Request],
@@ -720,6 +1061,21 @@ class ServingEngine:
         ``overlap=True`` keeps the sampled first tokens on device and
         defers the host bookkeeping to the decode chunk's readback, so
         the prefill never blocks the chunk launch."""
+        if self._fail_prefill:
+            # injected fault: the prefill call fails before launch.  The
+            # whole group rolls back (fresh requests: re-prefill from
+            # scratch, charged one retry) and admission stops this tick.
+            self._fail_prefill = False
+            self._prefill_blocked = True
+            self.fault_events.append(
+                {"kind": "fail_prefill", "tick": self._tick, "uid": None,
+                 "slot": None, "recovered_at": None})
+            if self.tracer is not None:
+                self.tracer.engine_fault(self._tick, "fail_prefill",
+                                         rows=len(reqs))
+            for req in reqs:
+                self._rollback(req, self._tick, "fail_prefill")
+            return 0
         rows = self.max_batch if self.bucketed_prefill else len(reqs)
         tokens = np.zeros((rows, S), np.int32)
         lengths = np.ones((rows,), np.int32)   # dummy rows: 1 valid token
@@ -745,6 +1101,9 @@ class ServingEngine:
                 slot = free.pop(0)
                 self.sm.grant(slot, req, None)
                 req.t_admit = req.t_first = self._tick
+                if self._fault_mode:
+                    self._last_progress[slot] = self._tick
+                    self._mark_recovered(req)
                 grant_rows.append(r_i)
                 grant_slots.append(slot)
             self.sm.insert_from_prefill(grant_slots, grant_rows, cacheN)
@@ -762,6 +1121,8 @@ class ServingEngine:
             req.output.append(tok)
             self._c_total_tokens.inc()
             req.t_admit = req.t_first = self._tick
+            if self._fault_mode:
+                self._mark_recovered(req)
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.output) >= req.max_new_tokens):
                 # done at the prefill token: never occupies a slot
@@ -771,11 +1132,173 @@ class ServingEngine:
                 continue
             slot = free.pop(0)
             self.sm.grant(slot, req, tok)
+            if self._fault_mode:
+                self._last_progress[slot] = self._tick
             grant_rows.append(r_i)
             grant_slots.append(slot)
         if grant_rows:
             self.sm.insert_from_prefill(grant_slots, grant_rows, cacheN)
         return n_instant
+
+    # ------------------------------------------------------- crash restart
+    def all_requests(self) -> List[Request]:
+        """Every request the engine is currently tracking: finished, slot
+        resident, and queued (in that order).  Shed requests the caller
+        already holds are final — they appear in no engine structure."""
+        out: List[Request] = list(self.finished)
+        out.extend(r for r in self.sm.slots if r is not None)
+        out.extend(self.scheduler.queue)
+        return out
+
+    def checkpoint(self, manager, *, clock_now: Optional[float] = None,
+                   blocking: bool = True) -> int:
+        """Journal the complete engine state through a
+        :class:`repro.checkpoint.CheckpointManager` step (named by the
+        current tick): PRNG key + slot mirrors + every occupied slot's
+        cache column + every evicted snapshot column as the array tree,
+        and requests / queue order / tick / uid counter / fault state as
+        JSON extra.  :meth:`restore` rebuilds an engine that replays the
+        remaining schedule bit-identically.
+
+        Must run between steps (no overlapped admissions in flight) — the
+        driver checkpoints at chunk boundaries, where that always holds."""
+        if self._pending:
+            raise RuntimeError("checkpoint() with overlapped admissions "
+                               "in flight; call between steps")
+        from repro.plan import io as plan_io
+
+        occ = self.sm.occupied()
+        slot_cols: Dict[str, Any] = {}
+        slots_json: Dict[str, Any] = {}
+        if occ:
+            snaps = self.sm.snapshot_many(occ)
+            self._c_host_syncs.inc()
+            for slot, snap in zip(occ, snaps):
+                slot_cols[f"s{slot}"] = snap.cache_col
+                slots_json[str(slot)] = _req_to_json(self.sm.slots[slot])
+        saved_cols: Dict[str, Any] = {}
+        queue_json: List[Dict[str, Any]] = []
+        for req in self.scheduler.queue:
+            queue_json.append(_req_to_json(req))
+            if req.saved is not None:
+                saved_cols[f"u{req.uid}"] = req.saved.cache_col
+        state = {
+            "key": self._key,
+            "next_token": np.asarray(self.sm.next_token),
+            "active": np.asarray(self.sm.active),
+            "eos": np.asarray(self.sm.eos),
+            "remaining": np.asarray(self.sm.remaining),
+            "slot_cols": slot_cols,
+            "saved_cols": saved_cols,
+        }
+        extra = {"engine": {
+            "plan": plan_io.to_dict(self.plan.resolve()),
+            "tick": self._tick,
+            "uid_next": self._uid_next,
+            "clock_now": clock_now,
+            "slots": slots_json,
+            "queue": queue_json,
+            "finished": [_req_to_json(r) for r in self.finished],
+            "stalled": sorted(self._stalled),
+            "last_progress": [int(x) for x in self._last_progress],
+            "util_history": list(self.util_history),
+            "counters": {
+                "total_tokens": self.total_tokens,
+                "instant_admits": self.instant_admits,
+                "shed": self.shed,
+                "faults": {k: int(v) for k, v in self.fault_stats().items()},
+            },
+        }}
+        manager.save(self._tick, state, extra=extra, blocking=blocking)
+        return self._tick
+
+    @classmethod
+    def restore(cls, manager, params, *, model: Optional[LM] = None,
+                sharder: Optional[Sharder] = None,
+                step: Optional[int] = None,
+                tracer: Optional[Tracer] = None) -> "ServingEngine":
+        """Rebuild an engine from a :meth:`checkpoint` step (latest when
+        ``step`` is None).  The restored engine's remaining schedule —
+        tick stamps, outputs, uids minted for replayed submissions — is
+        bit-identical to the uninterrupted engine's from the checkpoint
+        tick, because every input to the deterministic loop (PRNG key,
+        cache columns, mirrors, queue order, counters) is journaled."""
+        if step is None:
+            step = manager.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint steps under {manager.directory}")
+        extra = manager.manifest(step).get("extra") or {}
+        if "engine" not in extra:
+            raise ValueError(
+                f"checkpoint step {step} was not written by "
+                f"ServingEngine.checkpoint(): no 'engine' extra")
+        ex = extra["engine"]
+        from repro.plan import io as plan_io
+
+        plan = plan_io.from_dict(ex["plan"])
+        eng = cls.from_plan(plan, params, model=model, sharder=sharder,
+                            tracer=tracer)
+        occ = sorted(int(k) for k in ex["slots"])
+        saved_uids = [d["uid"] for d in ex["queue"]
+                      if "saved_next_token" in d]
+        template = {
+            "key": eng._key,
+            "next_token": np.asarray(eng.sm.next_token),
+            "active": np.asarray(eng.sm.active),
+            "eos": np.asarray(eng.sm.eos),
+            "remaining": np.asarray(eng.sm.remaining),
+            "slot_cols": {f"s{i}": gather_slots(eng.sm.cache, eng.sm.axes,
+                                                [i]) for i in occ},
+            "saved_cols": {f"u{u}": gather_slots(eng.sm.cache, eng.sm.axes,
+                                                 [0]) for u in saved_uids},
+        }
+        st = manager.restore(template, step=step)
+        # slot-resident requests first: the public restore path scatters
+        # each journaled column back (covers dense and paged layouts)
+        for i in occ:
+            req = _req_from_json(ex["slots"][str(i)])
+            snap = SlotSnapshot(st["slot_cols"][f"s{i}"],
+                                int(st["next_token"][i]))
+            eng.sm.restore(i, snap, req)
+            eng._recovery[req.uid] = (snap, len(req.output))
+        # then overwrite the mirrors wholesale: restore() above recomputed
+        # remaining/active heuristically; the journaled arrays are exact
+        # (stalled slots inactive, mid-flight remaining counts, ...)
+        eng.sm.next_token[:] = st["next_token"]
+        eng.sm.active[:] = st["active"]
+        eng.sm.eos[:] = st["eos"]
+        eng.sm.remaining[:] = st["remaining"]
+        eng._key = jnp.asarray(st["key"])
+        for d in ex["queue"]:
+            nt = d.get("saved_next_token")
+            req = _req_from_json(d)
+            if nt is not None:
+                req.saved = SlotSnapshot(st["saved_cols"][f"u{req.uid}"],
+                                         int(nt))
+            eng.scheduler.submit(req)
+        for d in ex["finished"]:
+            eng.finished.append(_req_from_json(d))
+            eng._c_completed.inc()
+        c = ex.get("counters", {})
+        eng._c_total_tokens.inc(int(c.get("total_tokens", 0)))
+        eng._c_instant_admits.inc(int(c.get("instant_admits", 0)))
+        eng._c_shed.inc(int(c.get("shed", 0)))
+        fc = c.get("faults", {})
+        for ctr, key in ((eng._c_f_injected, "injected"),
+                         (eng._c_f_quarantined, "quarantined"),
+                         (eng._c_f_retries, "retries"),
+                         (eng._c_f_shed, "shed"),
+                         (eng._c_f_watchdog, "watchdog_evictions")):
+            ctr.inc(int(fc.get(key, 0)))
+        eng._tick = int(ex["tick"])
+        eng._uid_next = int(ex["uid_next"])
+        eng.util_history = list(ex.get("util_history", []))
+        eng._stalled = set(int(s) for s in ex.get("stalled", []))
+        eng._last_progress[:] = np.asarray(ex["last_progress"],
+                                           dtype=np.int64)
+        eng.restored_from = {"step": step, "clock_now": ex["clock_now"]}
+        return eng
 
     # ------------------------------------------------------------- telemetry
     @property
@@ -835,4 +1358,5 @@ class ServingEngine:
 
 
 # re-exported for back-compat: the policy registry lives in scheduler.py
-__all__ = ["Request", "ServingEngine", "POLICIES", "MIN_BUCKET"]
+__all__ = ["Request", "ServingEngine", "EngineKilled", "POLICIES",
+           "MIN_BUCKET"]

@@ -311,6 +311,19 @@ class SlotManager:
         self.remaining[slot] = req.max_new_tokens - len(req.output)
         self.next_token[slot] = snap.next_token
 
+    def scrub(self, slots: Sequence[int]) -> None:
+        """Zero-wipe slot columns (fault quarantine): no poisoned value
+        survives for the guard scan or the slot's next tenant.  Device-only
+        (no host sync); works under both layouts — the paged manager's
+        ``cache`` setter re-pages the wiped view and re-heals its null
+        block, and the subsequent ``release`` wipes the freed blocks."""
+        slots = list(slots)
+        if not slots:
+            return
+        col = gather_slots(self.cache, self.axes, slots)
+        self.cache = scatter_slots(self.cache, self.axes, slots,
+                                   jax.tree.map(jnp.zeros_like, col))
+
     # ------------------------------------------------------ post-chunk sync
     def refresh_after_chunk(self, last_tokens: np.ndarray) -> None:
         """Re-derive the host mirrors from the authoritative slot table

@@ -67,10 +67,45 @@ class WorkloadItem:
 
     @staticmethod
     def from_json(d: dict) -> "WorkloadItem":
+        """Parse one trace record, naming the offending field on bad input
+        (a malformed line in a multi-MB JSONL trace is otherwise a bare
+        ``KeyError: 't'`` with no hint of where or what)."""
+        if not isinstance(d, dict):
+            raise ValueError(f"trace record must be a JSON object, "
+                             f"got {type(d).__name__}")
+        for field in ("t", "prompt"):
+            if field not in d:
+                raise ValueError(f"trace record missing required field "
+                                 f"{field!r} (has: {sorted(d)})")
+        unknown = set(d) - {"t", "prompt", "max_new_tokens", "eos_id",
+                            "deadline"}
+        if unknown:
+            raise ValueError(f"trace record has unknown fields "
+                             f"{sorted(unknown)}")
+        try:
+            t = float(d["t"])
+        except (TypeError, ValueError):
+            raise ValueError(f"field 't' must be a number, got {d['t']!r}")
+        if not isinstance(d["prompt"], (list, tuple)):
+            raise ValueError(f"field 'prompt' must be a list of token ids, "
+                             f"got {type(d['prompt']).__name__}")
+        try:
+            prompt = tuple(int(x) for x in d["prompt"])
+        except (TypeError, ValueError):
+            raise ValueError(f"field 'prompt' must contain integer token "
+                             f"ids, got {d['prompt']!r}")
+        try:
+            max_new = int(d.get("max_new_tokens", 16))
+        except (TypeError, ValueError):
+            raise ValueError(f"field 'max_new_tokens' must be an int, "
+                             f"got {d['max_new_tokens']!r}")
         dl = d.get("deadline")
-        return WorkloadItem(float(d["t"]), tuple(int(x) for x in d["prompt"]),
-                            int(d.get("max_new_tokens", 16)), d.get("eos_id"),
-                            None if dl is None else float(dl))
+        try:
+            dl = None if dl is None else float(dl)
+        except (TypeError, ValueError):
+            raise ValueError(f"field 'deadline' must be a number, "
+                             f"got {dl!r}")
+        return WorkloadItem(t, prompt, max_new, d.get("eos_id"), dl)
 
 
 # ---------------------------------------------------------------------------
@@ -275,9 +310,24 @@ def save_trace(path: str, items: Sequence[WorkloadItem]) -> None:
 
 
 def load_trace(path: str) -> List[WorkloadItem]:
+    """Load a JSONL arrival trace; a malformed line (truncated JSON, bad
+    field type, missing field) raises one ValueError naming the file,
+    line number, and problem rather than a bare decode/KeyError."""
+    items = []
     with open(path) as f:
-        items = [WorkloadItem.from_json(json.loads(line))
-                 for line in f if line.strip()]
+        for lineno, line in enumerate(f, start=1):
+            if not line.strip():
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{path}:{lineno}: not valid JSON ({e.msg} at column "
+                    f"{e.colno}) — truncated write?") from None
+            try:
+                items.append(WorkloadItem.from_json(d))
+            except ValueError as e:
+                raise ValueError(f"{path}:{lineno}: {e}") from None
     return sorted(items, key=lambda it: it.t)
 
 

@@ -86,3 +86,68 @@ def test_train_restart_equivalence(tmp_path, nosharder):
                             nosharder, second)
     np.testing.assert_allclose(hist_straight[-1]["loss"],
                                hist_resumed[-1]["loss"], rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Partial / missing checkpoints must fail with ONE clear error up front
+# (PR 8): a crash-restart that lands on a damaged step should name every
+# absent piece, not die on a bare FileNotFoundError mid-rebuild.
+# ---------------------------------------------------------------------------
+
+
+def test_restore_missing_step_lists_available(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"x": jnp.ones(2)})
+    with pytest.raises(FileNotFoundError, match=r"step 42 not found.*\[3\]"):
+        mgr.restore({"x": jnp.zeros(2)}, step=42)
+
+
+def test_restore_empty_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="no checkpoints under"):
+        mgr.restore({"x": jnp.zeros(2)})
+    with pytest.raises(FileNotFoundError, match="no steps saved yet"):
+        mgr.restore({"x": jnp.zeros(2)}, step=0)
+
+
+def test_restore_partial_step_names_missing_leaves(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.ones(2), "y": jnp.zeros(3)})
+    os.remove(os.path.join(tmp_path, "step_0000000001", "x.npy"))
+    with pytest.raises(FileNotFoundError,
+                       match=r"incomplete.*missing on disk.*'x'"):
+        mgr.restore({"x": jnp.zeros(2), "y": jnp.zeros(3)}, step=1)
+
+
+def test_restore_missing_manifest_explains(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.ones(2)})
+    os.remove(os.path.join(tmp_path, "step_0000000001", "manifest.json"))
+    with pytest.raises(FileNotFoundError, match="no manifest.json"):
+        mgr.restore({"x": jnp.zeros(2)}, step=1)
+    with pytest.raises(FileNotFoundError, match="no manifest.json"):
+        mgr.manifest(1)
+
+
+def test_restore_template_wants_unsaved_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.ones(2)})
+    with pytest.raises(FileNotFoundError,
+                       match="manifest never saved.*'z'"):
+        mgr.restore({"x": jnp.zeros(2), "z": jnp.zeros(1)}, step=1)
+
+
+def test_extension_dtype_roundtrip_bit_exact(tmp_path):
+    """bfloat16 (any ml_dtypes extension dtype) survives the .npy trip:
+    numpy reloads it as a raw void record, and restore must bit-view it
+    back — .astype raises 'no cast function' and a value-cast would not
+    be bit-exact anyway.  This is what engine crash-restart exercises on
+    every bf16 cache."""
+    x = (jnp.arange(64, dtype=jnp.float32) / 7.0).astype(jnp.bfloat16)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, {"x": x})
+    out = mgr.restore({"x": jnp.zeros(64, dtype=jnp.bfloat16)}, step=2)
+    assert out["x"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["x"]).view(np.uint16),
+        np.asarray(x).view(np.uint16), err_msg="bf16 bits changed")

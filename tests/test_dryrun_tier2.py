@@ -102,3 +102,59 @@ def test_dryrun_grid_cell_512_devices(arch, shape):
     cell = json.loads(line[len("CELL_JSON="):])
     assert cell["ok"] is True, cell
     assert cell["chips"] == 512
+
+
+# ---------------------------------------------------------------------------
+# tier2 chaos grid (PR 8): a seeded fault storm against every tier-1-
+# pinned serving arch, dense and paged — each run must end with zero
+# lost requests (every uid completes or is accountably shed) and clean
+# pool invariants.  MoE archs are excluded on purpose: expert routing
+# shares capacity across the batch, so a poisoned lane can contaminate
+# co-tenants (see benchmarks/README.md, "Fault model & recovery").
+# ---------------------------------------------------------------------------
+
+CHAOS_GRID = [
+    (arch, layout)
+    for arch in ("rwkv6-1.6b", "qwen2.5-14b", "hymba-1.5b")
+    for layout in ("dense", "paged:8")
+]
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("arch,layout", CHAOS_GRID,
+                         ids=[f"{a}-{l}" for a, l in CHAOS_GRID])
+def test_chaos_grid_zero_lost_requests(arch, layout, tmp_path):
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.dist.sharding import Sharder
+    from repro.models.lm import build_model
+    from repro.plan.plan import ServingPlan
+    from repro.serving import (FaultInjector, ServingEngine, VirtualClock,
+                               drive_resilient, make_workload)
+    from repro.serving.faults import make_storm
+    from repro.testing import reduced_config
+
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = ServingPlan(arch=arch, reduced=True, max_batch=3, max_len=32,
+                       cache_layout=layout, retry_budget=3,
+                       watchdog_ticks=4,
+                       provenance={"source": "tier2-chaos"}).resolve()
+    items = make_workload("poisson", rate=0.6, duration=24.0, seed=4,
+                          vocab_size=cfg.vocab_size, prompt_len=(2, 12),
+                          max_new_tokens=(2, 8))
+    storm = make_storm(duration=30, seed=17, n_faults=6, max_batch=3)
+    eng = ServingEngine.from_plan(plan, params, model=model,
+                                  sharder=Sharder(None, {}))
+    rep = drive_resilient(eng, items, VirtualClock(),
+                          injector=FaultInjector(storm),
+                          manager=CheckpointManager(str(tmp_path)),
+                          checkpoint_every=4)
+    assert rep.lost_uids() == [], \
+        f"{arch}/{layout}: lost requests {rep.lost_uids()}"
+    assert len(rep.requests) == len(items)
+    assert rep.engine.fault_stats()["injected"] >= 1
+    if layout != "dense":
+        rep.engine.sm.check_invariants()

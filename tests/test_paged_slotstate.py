@@ -338,3 +338,76 @@ def test_paged_bytes_resident_never_exceeds_dense(built, arch):
     assert paged.sm.tokens_in_flight() == 0
     assert paged.sm.blocks_free() == sum(
         p.capacity - 1 for p in paged.sm._pools.values())
+
+
+# ---------------------------------------------------------------------------
+# Fault interleavings (PR 8): inject/quarantine/retry under dense vs paged.
+# The recovery layer (numeric guard, scrub, rollback, watchdog) routes
+# through gather/scatter/release — exactly the ops the paged pools remap —
+# so any fault interleaving must leave the two layouts bit-identical in
+# surviving columns and outputs, with clean pool invariants throughout.
+# ---------------------------------------------------------------------------
+
+
+def _fault_lockstep(built, arch: str, seed: int, *, n_ops: int = 20,
+                    max_batch: int = 3) -> None:
+    from repro.plan.plan import ServingPlan
+    from repro.serving import FaultInjector, FaultPlan, FaultSpec
+
+    cfg, model, params, sharder = built(arch)
+    rng = np.random.default_rng(seed)
+    kinds = ("poison_slot", "stall_slot", "drop_readback", "fail_prefill")
+    fplan = FaultPlan(tuple(
+        FaultSpec(kind=kinds[int(rng.integers(0, len(kinds)))],
+                  tick=int(rng.integers(1, n_ops)),
+                  slot=int(rng.integers(0, max_batch)),
+                  mode=("nan", "garbage")[int(rng.integers(0, 2))],
+                  seed=seed + j)
+        for j in range(3)))
+
+    def make(layout):
+        plan = ServingPlan(
+            arch=arch, reduced=True, max_batch=max_batch, max_len=MAX_LEN,
+            cache_layout=layout, retry_budget=2, watchdog_ticks=3,
+            provenance={"source": "fault-lockstep"})
+        eng = ServingEngine(model, params, sharder, seed=11, plan=plan)
+        eng.attach_injector(FaultInjector(fplan))   # per-engine ledger
+        return eng
+
+    dense, paged = make("dense"), make(f"paged:{BLOCK}")
+    reqs_d, reqs_p = [], []
+    for op_i in range(n_ops):
+        op = rng.choice(("submit", "step", "step"))
+        if op == "submit":
+            n = int(rng.integers(1, 13))
+            prompt = [int(t) for t in rng.integers(0, cfg.vocab_size, n)]
+            max_new = int(rng.integers(1, 7))
+            reqs_d.append(dense.submit(list(prompt), max_new_tokens=max_new))
+            reqs_p.append(paged.submit(list(prompt), max_new_tokens=max_new))
+        else:
+            dense.step()
+            paged.step()
+        _compare_engines(dense, paged,
+                         f"{arch} seed={seed} op[{op_i}]={op}")
+    dense.run()
+    paged.run()
+    _compare_engines(dense, paged, f"{arch} seed={seed} drained")
+    out_d = [(r.output, r.done, r.shed, r.retries) for r in reqs_d]
+    out_p = [(r.output, r.done, r.shed, r.retries) for r in reqs_p]
+    assert out_d == out_p, f"{arch} seed={seed}: fault outcomes diverged"
+    assert dense.fault_stats() == paged.fault_stats(), \
+        f"{arch} seed={seed}: fault stats diverged"
+    assert [e for e in dense.fault_events] == \
+        [e for e in paged.fault_events], \
+        f"{arch} seed={seed}: fault events diverged"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_fault_interleavings_bit_exact(built, arch, seed):
+    """Inject/quarantine/retry under any interleaving: dense and paged
+    engines agree bit-for-bit on surviving cache columns, outputs,
+    retries, shed set, fault events, and fault counters — and the paged
+    pools keep their invariants through scrub/release recovery."""
+    _fault_lockstep(built, arch, seed)

@@ -224,3 +224,64 @@ def test_aggregate_preemption_counters():
     assert agg["preemption"] == {"preemptions": 2, "resumes": 2,
                                  "preempted_requests": 1}
     assert "evictions" in sm.format_summary(agg)
+
+
+# ---------------------------------------------------------------------------
+# Malformed-trace hardening (PR 8): a bad JSONL line must name the file,
+# line number, and offending field — not raise a bare KeyError/JSONError.
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, *lines):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def test_load_trace_truncated_json_names_line(tmp_path):
+    path = _write(tmp_path, '{"t": 1.0, "prompt": [1, 2]}',
+                  '{"t": 2.0, "pro')   # torn mid-write
+    with pytest.raises(ValueError, match=r"bad\.jsonl:2: not valid JSON"):
+        wl.load_trace(path)
+
+
+def test_load_trace_missing_field_names_field_and_line(tmp_path):
+    path = _write(tmp_path, '{"t": 1.0, "prompt": [1]}',
+                  '{"prompt": [2, 3]}')
+    with pytest.raises(ValueError,
+                       match=r"bad\.jsonl:2: .*required field 't'"):
+        wl.load_trace(path)
+    path = _write(tmp_path, '{"t": 4.0}')
+    with pytest.raises(ValueError, match=r"required field 'prompt'"):
+        wl.load_trace(path)
+
+
+def test_load_trace_bad_types_are_named(tmp_path):
+    with pytest.raises(ValueError, match=r":1: .*'t' must be a number"):
+        wl.load_trace(_write(tmp_path, '{"t": "noon", "prompt": [1]}'))
+    with pytest.raises(ValueError, match=r"'prompt' must be a list"):
+        wl.load_trace(_write(tmp_path, '{"t": 1.0, "prompt": "hi"}'))
+    with pytest.raises(ValueError, match=r"integer token ids"):
+        wl.load_trace(_write(tmp_path, '{"t": 1.0, "prompt": [1, "x"]}'))
+    with pytest.raises(ValueError, match=r"'max_new_tokens' must be an int"):
+        wl.load_trace(_write(
+            tmp_path, '{"t": 1.0, "prompt": [1], "max_new_tokens": "many"}'))
+    with pytest.raises(ValueError, match=r"'deadline' must be a number"):
+        wl.load_trace(_write(
+            tmp_path, '{"t": 1.0, "prompt": [1], "deadline": "soon"}'))
+
+
+def test_load_trace_unknown_field_and_non_object(tmp_path):
+    with pytest.raises(ValueError, match=r"unknown fields \['priority'\]"):
+        wl.load_trace(_write(
+            tmp_path, '{"t": 1.0, "prompt": [1], "priority": 9}'))
+    with pytest.raises(ValueError, match=r"must be a JSON object, got list"):
+        wl.load_trace(_write(tmp_path, '[1, 2, 3]'))
+
+
+def test_load_trace_skips_blank_lines(tmp_path):
+    path = _write(tmp_path, '{"t": 2.0, "prompt": [1]}', '',
+                  '{"t": 1.0, "prompt": [2]}', '   ')
+    items = wl.load_trace(path)
+    assert [it.t for it in items] == [1.0, 2.0]
