@@ -26,6 +26,7 @@ from benchmarks import (
     decode_hotpath,
     energy,
     fig4_fragmentation,
+    kernel_tiles,
     roofline_table,
     serving_load,
     table6_deepbench,
@@ -38,6 +39,7 @@ SUITES = {
     "fig4_fragmentation": fig4_fragmentation,
     "energy": energy,
     "roofline_table": roofline_table,
+    "kernel_tiles": kernel_tiles,
     "serving_load": serving_load,
     "decode_hotpath": decode_hotpath,
     "chaos": chaos,

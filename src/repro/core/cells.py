@@ -180,16 +180,18 @@ def dequantize_weights(w: Dict) -> Dict[str, jax.Array]:
 
 def serve(cfg: RNNCellConfig, w: Dict, x_seq: jax.Array,
           impl: str = "fused",
-          state: Optional[Tuple[jax.Array, ...]] = None) -> jax.Array:
+          state: Optional[Tuple[jax.Array, ...]] = None,
+          plan: Optional[Dict] = None) -> jax.Array:
     """Run the full T-step sequence.  x_seq: (T, B, D) -> y (T, B, H).
 
     ``impl``: "blas" | "semifused"/"fused" (jnp) | "kernel" (Pallas — see
     repro.kernels.fused_rnn.ops, dispatched there to keep this module
-    importable without kernel deps).
+    importable without kernel deps).  ``plan`` is a ``tile_plans`` entry
+    forwarded to the kernel path (bh / persistent geometry).
     """
     if impl == "kernel":
         from repro.kernels.fused_rnn import ops as kernel_ops
-        return kernel_ops.serve(cfg, w, x_seq, state=state)
+        return kernel_ops.serve(cfg, w, x_seq, state=state, plan=plan)
     wd = dequantize_weights(w) if cfg.precision in ("int8",) else \
         {k: v.astype(F32) for k, v in w.items()}
     B, H = x_seq.shape[1], cfg.hidden

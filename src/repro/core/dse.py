@@ -14,12 +14,21 @@ fixed-geometry MVM engine (Brainwave's hv=400, rv=40, ru=6) that fragments
 so the search is over ``bh`` under a VMEM-residency constraint, with an
 analytic latency model built from the hardware constants in repro.hw.
 ``fragmentation`` reproduces Fig. 4's utilization comparison.
+
+PR 9 widens the same :class:`Plan` record to the other three Pallas
+kernels so ``ServingPlan.tile_plans`` can carry every kernel's BlockSpec
+geometry: ``bq``/``bk`` for flash_attention (query/KV tile rows, searched
+by :func:`best_attn_plan`) and ``bm``/``bn``/``bk`` for matmul_int8
+(output/contraction tiles, :func:`best_matmul_plan`).  Fields a given
+kernel does not use stay at their zero default and are stripped from the
+serialized form by :func:`plan_dict`, so recurrent-cell plan dicts keep
+the exact key set the committed BENCH trajectories embed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro import hw
 from repro.core.cells import RNNCellConfig
@@ -27,16 +36,59 @@ from repro.core.cells import RNNCellConfig
 MXU = 128
 SUBLANE = 8
 
+# pipeline overhead per grid step (issue + reduction drain): the
+# 2 + log2(lanes) + 1 cycles of paper §4.1, at ~1 GHz
+_STEP_OVERHEAD_S = (2 + 7 + 1) / 0.94e9
+
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
     bh: int                   # H-tile rows per grid step
-    n_tiles: int              # H / bh
+    n_tiles: int              # grid steps (H / bh for the RNN kernels)
     vmem_bytes: int           # working set claimed by the BlockSpecs
-    resident: bool            # weights stay in VMEM across time steps
+    resident: bool            # working set fits the VMEM budget
     step_latency_s: float     # modeled per-timestep latency
     util: float               # useful MACs / padded MACs
-    bound: str                # "compute" | "hbm" | "latency"
+    bound: str                # "compute" | "vmem" | "hbm" | "latency"
+    # --- per-kernel tile fields (zero = unused by this kernel) ----------
+    bq: int = 0               # flash_attention: query rows per grid step
+    bk: int = 0               # flash_attention KV tile / matmul K tile
+    bm: int = 0               # matmul_int8: output rows per grid step
+    bn: int = 0               # matmul_int8: output cols per grid step
+    persistent: bool = False  # fused decode keeps weights VMEM-resident
+    #                           across the device loop (requires n_tiles=1)
+
+
+# Plan fields stripped by plan_dict() when at their unused default, so a
+# recurrent-cell plan serializes to the same key set as before PR 9.
+_OPTIONAL_PLAN_FIELDS = ("bq", "bk", "bm", "bn", "persistent")
+
+
+def plan_dict(plan: Plan) -> Dict[str, object]:
+    """Compact JSON form of a Plan: optional tile fields at their unused
+    defaults are dropped (``tile_plans`` entries embedded in committed
+    BENCH cells predate them), and ``bh: 0`` likewise vanishes for the
+    attention/matmul plans that have no H tile."""
+    d = dataclasses.asdict(plan)
+    for name in _OPTIONAL_PLAN_FIELDS:
+        if not d[name]:
+            del d[name]
+    if not d["bh"]:
+        del d["bh"]
+    return d
+
+
+def snap_tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``tile`` (always >= 1).
+
+    The ops wrappers snap a requested tile to the nearest feasible
+    BlockSpec geometry instead of asserting, so a plan autotuned for one
+    shape degrades gracefully on a non-divisible one."""
+    dim, tile = int(dim), int(tile)
+    tile = max(1, min(tile, dim))
+    while dim % tile:
+        tile -= 1
+    return tile
 
 
 def _pad(n: int, m: int) -> int:
@@ -97,9 +149,8 @@ def plan_metrics(cfg: RNNCellConfig, bh: int,
     compute_s = 2.0 * padded_macs * max(B, SUBLANE) / mul_peak
     vmem_s = cfg.weight_bytes() / spec.vmem_bw
     hbm_s = 0.0 if resident else cfg.weight_bytes() / spec.hbm_bw
-    # fixed pipeline overhead per tile (grid step issue + reduction drain),
-    # the 2 + log2(lanes) + 1 cycles of paper §4.1, at ~1 GHz
-    overhead_s = n_tiles * (2 + 7 + 1) / 0.94e9
+    # fixed pipeline overhead per tile (grid step issue + reduction drain)
+    overhead_s = n_tiles * _STEP_OVERHEAD_S
     slowest = max(compute_s, vmem_s, hbm_s)
     lat = slowest + overhead_s
     # explicit comparison (a dict keyed by the times would merge entries
@@ -142,6 +193,136 @@ def best_plan(cfg: RNNCellConfig, spec: hw.HardwareSpec = hw.DEFAULT, *,
     if not plans:  # weights can never be resident; stream with big tiles
         plans = search(cfg, spec, max_batch=max_batch)
     return min(plans, key=lambda p: p.step_latency_s)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention tile search (bq x bk)
+# ---------------------------------------------------------------------------
+
+
+def candidate_attn_tiles(seq_q: int, seq_kv: int) -> List[Tuple[int, int]]:
+    """(bq, bk) grid: power-of-two divisors, bq from the sublane count up,
+    bk from one lane row (128) up — the shapes the TPU tiles natively."""
+    bqs = [t for t in (8, 16, 32, 64, 128, 256)
+           if t <= seq_q and seq_q % t == 0] or [snap_tile(seq_q, 256)]
+    bks = [t for t in (128, 256, 512, 1024)
+           if t <= seq_kv and seq_kv % t == 0] or [snap_tile(seq_kv, 512)]
+    return [(bq, bk) for bq in bqs for bk in bks]
+
+
+def attn_tile_vmem_bytes(bq: int, bk: int, head_dim: int) -> int:
+    """VMEM per flash grid step: q tile + double-buffered k/v tiles +
+    f32 score block + f32 accumulator/softmax-state scratch + out tile."""
+    q = bq * head_dim * 2
+    kv = 2 * (2 * bk * head_dim * 2)      # k and v, double-buffered
+    scores = bq * bk * 4
+    acc = bq * head_dim * 4 + 2 * bq * 4  # acc + (m, l)
+    out = bq * head_dim * 2
+    return q + kv + scores + acc + out
+
+
+def attn_plan_metrics(seq_q: int, seq_kv: int, head_dim: int,
+                      bq: int, bk: int,
+                      spec: hw.HardwareSpec = hw.DEFAULT, *,
+                      n_heads: int = 1, batch: int = 1) -> Plan:
+    """Score one flash_attention tile choice (QK^T + AV roofline)."""
+    ntq, ntk = seq_q // bq, seq_kv // bk
+    n_steps = batch * n_heads * ntq * ntk
+    vmem = attn_tile_vmem_bytes(bq, bk, head_dim)
+    resident = vmem <= hw.vmem_budget(spec)
+
+    true_macs = 2 * seq_q * seq_kv * head_dim          # QK^T and AV
+    padded_macs = (2 * ntq * ntk * _pad(bq, SUBLANE)
+                   * _pad(bk, MXU) * _pad(head_dim, MXU))
+    util = true_macs / padded_macs
+
+    compute_s = 2.0 * padded_macs * batch * n_heads / spec.peak_bf16_flops
+    # K/V stream once per query tile; q and out stream once
+    kv_bytes = batch * n_heads * ntq * seq_kv * head_dim * 2 * 2
+    qo_bytes = batch * n_heads * seq_q * head_dim * 2 * 2
+    hbm_s = (kv_bytes + qo_bytes) / spec.hbm_bw
+    overhead_s = n_steps * _STEP_OVERHEAD_S
+    slowest = max(compute_s, hbm_s)
+    bound = "compute" if slowest == compute_s else "hbm"
+    if overhead_s > slowest:
+        bound = "latency"
+    return Plan(bh=0, n_tiles=n_steps, vmem_bytes=vmem, resident=resident,
+                step_latency_s=slowest + overhead_s, util=util, bound=bound,
+                bq=bq, bk=bk)
+
+
+def best_attn_plan(seq_q: int, seq_kv: int, head_dim: int,
+                   spec: hw.HardwareSpec = hw.DEFAULT, *,
+                   n_heads: int = 1, batch: int = 1) -> Plan:
+    plans = [attn_plan_metrics(seq_q, seq_kv, head_dim, bq, bk, spec,
+                               n_heads=n_heads, batch=batch)
+             for bq, bk in candidate_attn_tiles(seq_q, seq_kv)]
+    feasible = [p for p in plans if p.resident] or plans
+    return min(feasible, key=lambda p: p.step_latency_s)
+
+
+# ---------------------------------------------------------------------------
+# matmul_int8 tile search (bm x bn x bk)
+# ---------------------------------------------------------------------------
+
+
+def candidate_mm_tiles(M: int, N: int, K: int) -> List[Tuple[int, int, int]]:
+    bms = [t for t in (8, 32, 64, 128, 256)
+           if t <= M and M % t == 0] or [snap_tile(M, 256)]
+    bns = [t for t in (128, 256, 512)
+           if t <= N and N % t == 0] or [snap_tile(N, 256)]
+    bks = [t for t in (128, 256, 512)
+           if t <= K and K % t == 0] or [snap_tile(K, 512)]
+    return [(bm, bn, bk) for bm in bms for bn in bns for bk in bks]
+
+
+def matmul_tile_vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """VMEM per matmul grid step: double-buffered x/w tiles + f32
+    accumulator + out tile + per-column scale/bias row."""
+    x = 2 * bm * bk * 2
+    w = 2 * bk * bn * 1
+    acc = bm * bn * 4
+    out = bm * bn * 2
+    scale = 2 * bn * 4
+    return x + w + acc + out + scale
+
+
+def matmul_plan_metrics(M: int, N: int, K: int,
+                        bm: int, bn: int, bk: int,
+                        spec: hw.HardwareSpec = hw.DEFAULT) -> Plan:
+    """Score one W8A16 matmul tile choice.  The kernel widens int8
+    weights to bf16 before the MXU dot, so compute runs at bf16 peak;
+    the win from int8 is the halved weight stream."""
+    ntm, ntn, ntk = M // bm, N // bn, K // bk
+    n_steps = ntm * ntn * ntk
+    vmem = matmul_tile_vmem_bytes(bm, bn, bk)
+    resident = vmem <= hw.vmem_budget(spec)
+
+    true_macs = M * N * K
+    padded_macs = (n_steps * _pad(bm, SUBLANE)
+                   * _pad(bn, MXU) * _pad(bk, MXU))
+    util = true_macs / padded_macs
+
+    compute_s = 2.0 * padded_macs / spec.peak_bf16_flops
+    # weights stream once per m-tile, activations once per n-tile
+    hbm_bytes = ntm * K * N * 1 + ntn * M * K * 2 + M * N * 2
+    hbm_s = hbm_bytes / spec.hbm_bw
+    overhead_s = n_steps * _STEP_OVERHEAD_S
+    slowest = max(compute_s, hbm_s)
+    bound = "compute" if slowest == compute_s else "hbm"
+    if overhead_s > slowest:
+        bound = "latency"
+    return Plan(bh=0, n_tiles=n_steps, vmem_bytes=vmem, resident=resident,
+                step_latency_s=slowest + overhead_s, util=util, bound=bound,
+                bk=bk, bm=bm, bn=bn)
+
+
+def best_matmul_plan(M: int, N: int, K: int,
+                     spec: hw.HardwareSpec = hw.DEFAULT) -> Plan:
+    plans = [matmul_plan_metrics(M, N, K, bm, bn, bk, spec)
+             for bm, bn, bk in candidate_mm_tiles(M, N, K)]
+    feasible = [p for p in plans if p.resident] or plans
+    return min(feasible, key=lambda p: p.step_latency_s)
 
 
 # ---------------------------------------------------------------------------

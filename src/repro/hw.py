@@ -99,6 +99,16 @@ PLASTICINE = HardwareSpec(
 
 DEFAULT = TPU_V5E
 
+# name -> spec, for CLI flags (launch.serve --hw-spec) and plan provenance
+SPECS = {spec.name: spec for spec in (TPU_V5E, PLASTICINE)}
+
+
+def get_spec(name: str) -> HardwareSpec:
+    if name not in SPECS:
+        raise KeyError(f"unknown hardware spec {name!r}; "
+                       f"known: {sorted(SPECS)}")
+    return SPECS[name]
+
 
 def vmem_budget(hw: HardwareSpec = DEFAULT, fraction: float = 0.5) -> int:
     """Usable VMEM once double buffering is accounted for."""

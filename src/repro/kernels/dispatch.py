@@ -1,0 +1,64 @@
+"""Plan-driven kernel dispatch: one place that reads a ``tile_plans``
+entry and decides which implementation a model call site runs.
+
+A ``ServingPlan.tile_plans`` entry (one dict per kernel kind, produced
+by ``planner.tile_plans_for`` / ``core.dse``) may carry an ``impl``
+field:
+
+  * ``"auto"`` (default) — use the Pallas kernel only on a TPU backend;
+    everywhere else keep the pure-jnp reference path.  CPU runs (tests,
+    the committed BENCH trajectories, the virtual-clock scheduler) stay
+    byte-identical to a plan with no tile_plans at all.
+  * ``"jnp"`` — force the reference path.
+  * ``"pallas"`` — force the Pallas kernel; off-TPU it runs in
+    interpret mode (the mode the parity tests and smoke probes use).
+
+The tile fields themselves (``bh``/``bq``/``bk``/``bm``/``bn``,
+``persistent``) are read by each kernel's ops wrapper via
+:func:`tile_arg`; geometry is snapped to the actual shapes with
+``core.dse.snap_tile`` at the call site.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import jax
+
+VALID_IMPLS = ("auto", "jnp", "pallas")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(entry: Optional[Mapping[str, object]]) -> str:
+    """Collapse a tile-plan entry's ``impl`` field to "jnp" | "pallas"."""
+    impl = str((entry or {}).get("impl", "auto"))
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"tile plan impl {impl!r} not in {VALID_IMPLS}")
+    if impl == "auto":
+        return "pallas" if on_tpu() else "jnp"
+    return impl
+
+
+def pallas_active(entry: Optional[Mapping[str, object]]) -> bool:
+    """True when this call site should run its Pallas kernel."""
+    return entry is not None and resolve_impl(entry) == "pallas"
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret flag for the current backend (True off-TPU)."""
+    return not on_tpu()
+
+
+def tile_arg(entry: Optional[Mapping[str, object]], name: str,
+             default: int) -> int:
+    """Read one tile field from a plan entry, falling back to the
+    kernel's documented default when absent or zero."""
+    val = int((entry or {}).get(name, 0) or 0)
+    return val if val > 0 else default
+
+
+__all__ = ["VALID_IMPLS", "on_tpu", "resolve_impl", "pallas_active",
+           "interpret_mode", "tile_arg"]

@@ -1,0 +1,121 @@
+"""Pallas TPU split-KV flash-decoding: one query token per sequence
+against a (possibly ring-layout) KV cache.
+
+The single-pass jnp decode path (``repro.models.attention.decode_attention``)
+serializes the whole softmax over one KV stretch; for long contexts that
+leaves the chip idle behind one block.  Flash-decoding instead grids over
+KV *chunks* — every (batch, head, chunk) cell computes an independent
+partial softmax (running max ``m``, normalizer ``l``, unnormalized
+accumulator ``acc``) and a cheap log-sum-exp combine over the chunk axis
+merges them outside the kernel.  All three grid axes are "parallel": no
+cross-chunk carry exists, which is exactly what lets long-context decode
+stop serializing.
+
+Masking follows ``decode_attention``: slots with ``kv_pos < 0`` are empty
+(ring cache holes / unfilled prefill slots), ``causal`` compares against
+the query's absolute position, ``window`` bounds the lookback.  A chunk
+whose every slot is masked yields ``m = NEG_INF`` and is annihilated by
+the ``exp(m - M)`` combine weight.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro._jax_compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kvp_ref, qp_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, causal: bool, window: int, softcap: float):
+    q = q_ref[0].astype(jnp.bfloat16)                     # (1, d)
+    k = k_ref[0, 0].astype(jnp.bfloat16)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.bfloat16)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # (1, bk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kvp = kvp_ref[0]                                      # (1, bk)
+    qp = qp_ref[0]                                        # (1, 1)
+    mask = kvp >= 0
+    if causal:
+        mask &= kvp <= qp
+    if window > 0:
+        mask &= (qp - kvp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=1)                                # (1,)
+    p = jnp.exp(s - m[:, None])                           # (1, bk)
+    l = jnp.sum(p, axis=1)                                # (1,)
+    acc = jax.lax.dot_general(p.astype(jnp.bfloat16), v,
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=F32)  # (1, d)
+    m_ref[...] = m.reshape(m_ref.shape)
+    l_ref[...] = l.reshape(l_ref.shape)
+    acc_ref[...] = acc.reshape(acc_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bk", "interpret"))
+def flash_decode(q, k, v, kv_pos, q_pos, *, causal: bool = True,
+                 window: int = 0, softcap: float = 0.0, bk: int = 512,
+                 interpret: bool = False):
+    """q (B, H, d); k/v (B, H, S, d) — kv already head-expanded;
+    kv_pos (B, S) absolute positions (-1 = empty slot); q_pos (B,).
+    Returns (B, H, d) f32 (unnormalized-partials combined here).
+    """
+    B, H, d = q.shape
+    S = k.shape[2]
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = 1.0 / math.sqrt(d)
+    kvp = kv_pos.astype(jnp.int32)[:, None, :]            # (B, 1, S)
+    qp = q_pos.astype(jnp.int32)[:, None, None]           # (B, 1, 1)
+    m_p, l_p, acc_p = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap),
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h, ik: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk), lambda b, h, ik: (b, 0, ik)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, ik: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b, h, ik: (b, h, ik)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, ik: (b, h, ik)),
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nk), F32),
+            jax.ShapeDtypeStruct((B, H, nk), F32),
+            jax.ShapeDtypeStruct((B, H, nk, d), F32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+        name="flash_decode",
+    )(q, k, v, kvp, qp)
+
+    # log-sum-exp combine over the chunk axis (cheap: (B, H, nk) scalars)
+    m_g = jnp.max(m_p, axis=2)                            # (B, H)
+    alpha = jnp.exp(m_p - m_g[:, :, None])                # (B, H, nk)
+    l_g = jnp.sum(alpha * l_p, axis=2)                    # (B, H)
+    out = jnp.sum(alpha[..., None] * acc_p, axis=2)       # (B, H, d)
+    return out / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+__all__ = ["flash_decode"]

@@ -1,33 +1,82 @@
-"""Jit'd wrapper: model-layout adapter for the flash attention kernel.
+"""Jit'd wrappers: model-layout adapters for the flash attention kernels.
 
-Accepts the model's (B, S, H, hd) layout with separate KV heads and
-dispatches to the Pallas kernel (TPU) or interpret mode (CPU tests).
+Accept the model's (B, S, H, hd) layout with separate KV heads and
+dispatch to the Pallas kernels (TPU) or interpret mode (CPU tests).
+Tile geometry (bq/bk) comes from a ``tile_plans`` entry when one is
+passed, snapped to the actual sequence lengths; the hardcoded values
+are the documented defaults.
 """
 
 from __future__ import annotations
 
+from typing import Mapping, Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import interpret_mode, tile_arg
 from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.flash_decode import flash_decode
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
 
 
-def attention(q, k, v, *, causal: bool = True, window: int = 0,
-              softcap: float = 0.0, interpret: bool = None):
-    """q (B, S, H, hd); k/v (B, S, K, hd) -> (B, S, H, hd)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    B, S, H, hd = q.shape
+def _expand_kv(k, v, H: int):
     K = k.shape[2]
     if K != H:
         rep = H // K
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
+    return k, v
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, q_pos=None, kv_pos=None,
+              bq: int = 0, bk: int = 0,
+              interpret: Optional[bool] = None,
+              plan: Optional[Mapping[str, object]] = None):
+    """q (B, S, H, hd); k/v (B, S, K, hd) -> (B, S, H, hd).
+
+    ``q_pos``/``kv_pos`` (B, S) enable position-array masking (padded
+    prefill buckets); ``plan`` supplies bq/bk tile geometry."""
+    from repro.core.dse import snap_tile
+
+    if interpret is None:
+        interpret = interpret_mode()
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    k, v = _expand_kv(k, v, H)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    bq = min(256, S)
-    bk = min(512, S)
-    out = flash_attention(qt, kt, vt, causal=causal, window=window,
-                          softcap=softcap, bq=bq, bk=bk, interpret=interpret)
+    bq = snap_tile(S, min(tile_arg(plan, "bq", bq or DEFAULT_BQ), S))
+    bk = snap_tile(Skv, min(tile_arg(plan, "bk", bk or DEFAULT_BK), Skv))
+    out = flash_attention(qt, kt, vt, q_pos, kv_pos, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+def decode(q, k_cache, v_cache, kv_pos, q_pos, *, causal: bool = True,
+           window: int = 0, softcap: float = 0.0, bk: int = 0,
+           interpret: Optional[bool] = None,
+           plan: Optional[Mapping[str, object]] = None):
+    """Split-KV flash-decoding adapter, mirroring the contract of
+    ``repro.models.attention.decode_attention``: q (B, H, hd), caches
+    (B, S, K, hd), kv_pos (B, S) with -1 holes, q_pos (B,).
+    Returns (B, H, hd) bf16."""
+    from repro.core.dse import snap_tile
+
+    if interpret is None:
+        interpret = interpret_mode()
+    B, H, hd = q.shape
+    S = k_cache.shape[1]
+    k, v = _expand_kv(k_cache, v_cache, H)
+    kt = k.transpose(0, 2, 1, 3)                          # (B, H, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    bk = snap_tile(S, min(tile_arg(plan, "bk", bk or DEFAULT_BK), S))
+    out = flash_decode(q, kt, vt, kv_pos, q_pos, causal=causal,
+                       window=window, softcap=softcap, bk=bk,
+                       interpret=interpret)
+    return out.astype(jnp.bfloat16)

@@ -137,6 +137,87 @@ def _gru_kernel(x_ref, wx_ref, wh_ref, sx_ref, sh_ref, bx_ref, bh_ref,
         hT_ref[...] = h_new.astype(hT_ref.dtype)
 
 
+def _lstm_kernel_persistent(x_ref, wx_ref, wh_ref, sx_ref, sh_ref, b_ref,
+                            h0_ref, c0_ref,
+                            y_ref, hT_ref, cT_ref,
+                            h_scr, c_scr, *, H: int):
+    """Persistent-decode variant (Sparse Persistent RNNs): the whole
+    weight matrices live in VMEM for the full device loop — grid is (T,)
+    only, there is no H-tile streaming and no double-buffered h parity.
+    Requires the DSE to certify the weights fit (tile_vmem_bytes at
+    bh == H); math is bit-identical to the streaming kernel at bh == H."""
+    t = pl.program_id(0)
+    T = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(F32)
+        c_scr[...] = c0_ref[...].astype(F32)
+
+    x = x_ref[0]
+    zx, zh = _gates_matmul(x, h_scr[...], wx_ref, wh_ref, sx_ref, sh_ref,
+                           4, H)
+    z = zx + zh + b_ref[...]
+    i = jax.nn.sigmoid(z[:, 0])
+    j = jnp.tanh(z[:, 1])
+    f = jax.nn.sigmoid(z[:, 2])
+    o = jax.nn.sigmoid(z[:, 3])
+
+    c_new = f * c_scr[...] + i * j
+    h_new = o * jnp.tanh(c_new)
+    c_scr[...] = c_new
+    h_scr[...] = h_new
+    y_ref[0] = h_new.astype(y_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _final():
+        hT_ref[...] = h_new.astype(hT_ref.dtype)
+        cT_ref[...] = c_new.astype(cT_ref.dtype)
+
+
+def _gru_kernel_persistent(x_ref, wx_ref, wh_ref, sx_ref, sh_ref, bx_ref,
+                           bh_ref, h0_ref,
+                           y_ref, hT_ref,
+                           h_scr, *, H: int):
+    t = pl.program_id(0)
+    T = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(F32)
+
+    x = x_ref[0]
+    h_prev = h_scr[...]
+    zx, zh = _gates_matmul(x, h_prev, wx_ref, wh_ref, sx_ref, sh_ref, 3, H)
+    zx = zx + bx_ref[...]
+    zh = zh + bh_ref[...]
+    r = jax.nn.sigmoid(zx[:, 0] + zh[:, 0])
+    z = jax.nn.sigmoid(zx[:, 1] + zh[:, 1])
+    n = jnp.tanh(zx[:, 2] + r * zh[:, 2])
+
+    h_new = (1 - z) * n + z * h_prev
+    h_scr[...] = h_new
+    y_ref[0] = h_new.astype(y_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _final():
+        hT_ref[...] = h_new.astype(hT_ref.dtype)
+
+
+def _specs_persistent(D: int, H: int, G: int, B: int):
+    """Whole-array BlockSpecs over a (T,)-only grid: every weight index
+    map is constant, so each operand is fetched exactly once and pinned
+    in VMEM for the entire sync_every device loop."""
+    return dict(
+        x=pl.BlockSpec((1, B, D), lambda t: (t, 0, 0)),
+        wx=pl.BlockSpec((D, G, H), lambda t: (0, 0, 0)),
+        wh=pl.BlockSpec((H, G, H), lambda t: (0, 0, 0)),
+        s=pl.BlockSpec((G, H), lambda t: (0, 0)),
+        state=pl.BlockSpec((B, H), lambda t: (0, 0)),
+        y=pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
+    )
+
+
 def _specs(D: int, H: int, G: int, B: int, bh: int):
     """BlockSpecs shared by both cells.  Weight index maps are constant in
     t, so weight blocks are HBM-fetched once and stay VMEM-resident across
@@ -152,13 +233,42 @@ def _specs(D: int, H: int, G: int, B: int, bh: int):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bh", "interpret",
+                                             "persistent"))
 def fused_lstm(x_seq, w_x, w_h, s_x, s_h, b, h0, c0, *,
-               bh: int = 256, interpret: bool = False):
+               bh: int = 256, interpret: bool = False,
+               persistent: bool = False):
     """x_seq (T, B, D); w_x (D, 4, H) int8/bf16; s_* (4, H) f32; b (4, H);
-    h0/c0 (B, H).  Returns (y (T, B, H) bf16, h_T (B, H) f32, c_T)."""
+    h0/c0 (B, H).  Returns (y (T, B, H) bf16, h_T (B, H) f32, c_T).
+
+    ``bh`` is the H-tile (default 256 — the pre-DSE hardcoded geometry);
+    ``persistent=True`` switches to the weights-resident variant (grid
+    (T,) only, whole matrices pinned in VMEM — caller must have checked
+    ``dse.tile_vmem_bytes(cfg, H)`` against the budget)."""
     T, B, D = x_seq.shape
     H = w_h.shape[0]
+    if persistent:
+        sp = _specs_persistent(D, H, 4, B)
+        return pl.pallas_call(
+            functools.partial(_lstm_kernel_persistent, H=H),
+            grid=(T,),
+            in_specs=[sp["x"], sp["wx"], sp["wh"], sp["s"], sp["s"],
+                      sp["s"], sp["state"], sp["state"]],
+            out_specs=[sp["y"], sp["state"], sp["state"]],
+            out_shape=[
+                jax.ShapeDtypeStruct((T, B, H), jnp.bfloat16),
+                jax.ShapeDtypeStruct((B, H), F32),
+                jax.ShapeDtypeStruct((B, H), F32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((B, H), F32),
+                pltpu.VMEM((B, H), F32),
+            ],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("arbitrary",)),
+            interpret=interpret,
+            name="fused_lstm_persistent",
+        )(x_seq, w_x, w_h, s_x, s_h, b, h0, c0)
     bh = min(bh, H)
     assert H % bh == 0, (H, bh)
     sp = _specs(D, H, 4, B, bh)
@@ -184,13 +294,34 @@ def fused_lstm(x_seq, w_x, w_h, s_x, s_h, b, h0, c0, *,
     )(x_seq, w_x, w_h, s_x, s_h, b, h0, c0)
 
 
-@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bh", "interpret",
+                                             "persistent"))
 def fused_gru(x_seq, w_x, w_h, s_x, s_h, b_x, b_h, h0, *,
-              bh: int = 256, interpret: bool = False):
+              bh: int = 256, interpret: bool = False,
+              persistent: bool = False):
     """x_seq (T, B, D); w_x (D, 3, H); s_* (3, H); b_* (3, H); h0 (B, H).
-    Returns (y (T, B, H) bf16, h_T (B, H) f32)."""
+    Returns (y (T, B, H) bf16, h_T (B, H) f32).  See ``fused_lstm`` for
+    the ``bh``/``persistent`` contract."""
     T, B, D = x_seq.shape
     H = w_h.shape[0]
+    if persistent:
+        sp = _specs_persistent(D, H, 3, B)
+        return pl.pallas_call(
+            functools.partial(_gru_kernel_persistent, H=H),
+            grid=(T,),
+            in_specs=[sp["x"], sp["wx"], sp["wh"], sp["s"], sp["s"],
+                      sp["s"], sp["s"], sp["state"]],
+            out_specs=[sp["y"], sp["state"]],
+            out_shape=[
+                jax.ShapeDtypeStruct((T, B, H), jnp.bfloat16),
+                jax.ShapeDtypeStruct((B, H), F32),
+            ],
+            scratch_shapes=[pltpu.VMEM((B, H), F32)],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("arbitrary",)),
+            interpret=interpret,
+            name="fused_gru_persistent",
+        )(x_seq, w_x, w_h, s_x, s_h, b_x, b_h, h0)
     bh = min(bh, H)
     assert H % bh == 0, (H, bh)
     sp = _specs(D, H, 3, B, bh)

@@ -1,21 +1,41 @@
 """Jit'd wrapper for the W8A16 matmul: accepts the framework's quantized
-leaf convention ({"q": int8 (K, N), "scale": f32 (1, N)}) directly."""
+leaf convention ({"q": int8 (K, N), "scale": f32 (1, N)}) directly.
+
+Tile geometry (bm/bn/bk) comes from a ``tile_plans["matmul_int8"]``
+entry when one is passed, snapped to the actual problem shape; the
+hardcoded values are the documented defaults.
+"""
 
 from __future__ import annotations
+
+from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import interpret_mode, tile_arg
 from repro.kernels.matmul_int8.matmul_int8 import matmul_w8a16
 
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
 
-def qdot(x, leaf, bias=None, *, act: str = "none", interpret=None):
+
+def qdot(x, leaf, bias=None, *, act: str = "none", interpret=None,
+         plan: Optional[Mapping[str, object]] = None):
     """x (..., K) @ quantized leaf -> (..., N)."""
+    from repro.core.dse import snap_tile
+
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = interpret_mode()
     lead = x.shape[:-1]
     K = x.shape[-1]
+    N = leaf["q"].shape[-1]
     x2 = x.reshape(-1, K).astype(jnp.bfloat16)
+    M = x2.shape[0]
+    bm = snap_tile(M, min(tile_arg(plan, "bm", DEFAULT_BM), M))
+    bn = snap_tile(N, min(tile_arg(plan, "bn", DEFAULT_BN), N))
+    bk = snap_tile(K, min(tile_arg(plan, "bk", DEFAULT_BK), K))
     out = matmul_w8a16(x2, leaf["q"], leaf["scale"].reshape(-1), bias,
-                       act=act, interpret=interpret)
+                       act=act, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out.reshape(*lead, -1)

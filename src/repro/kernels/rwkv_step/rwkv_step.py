@@ -33,56 +33,66 @@ F32 = jnp.float32
 
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
-            y_ref, sT_ref, s_scr):
+            y_ref, sT_ref, s_scr, *, bh: int):
     t = pl.program_id(0)
+    hb = pl.program_id(1)
     T = pl.num_programs(0)
+    sl = pl.ds(hb * bh, bh)                         # this tile's heads
 
     @pl.when(t == 0)
     def _init():
-        s_scr[...] = s0_ref[...].astype(F32)        # (B, H, K, V)
+        s_scr[:, sl] = s0_ref[...].astype(F32)      # (B, bh, K, V)
 
-    r = r_ref[0].astype(F32)                        # (B, H, K)
+    r = r_ref[0].astype(F32)                        # (B, bh, K)
     k = k_ref[0].astype(F32)
     w = w_ref[0].astype(F32)                        # log-decay, <= 0
-    v = v_ref[0].astype(F32)                        # (B, H, V)
-    u = u_ref[...].astype(F32)                      # (H, K)
+    v = v_ref[0].astype(F32)                        # (B, bh, V)
+    u = u_ref[...].astype(F32)                      # (bh, K)
 
-    S = s_scr[...]
-    kv = k[..., None] * v[:, :, None, :]            # (B, H, K, V)
+    S = s_scr[:, sl]
+    kv = k[..., None] * v[:, :, None, :]            # (B, bh, K, V)
     read = S + u[None, :, :, None] * kv
-    y = jnp.sum(r[..., None] * read, axis=2)        # (B, H, V)
-    s_scr[...] = jnp.exp(w)[..., None] * S + kv
+    y = jnp.sum(r[..., None] * read, axis=2)        # (B, bh, V)
+    s_scr[:, sl] = jnp.exp(w)[..., None] * S + kv
     y_ref[0] = y.astype(y_ref.dtype)
 
     @pl.when(t == T - 1)
     def _final():
-        sT_ref[...] = s_scr[...]
+        sT_ref[...] = s_scr[:, sl]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def rwkv6_step(r, k, v, w_log, u, state, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def rwkv6_step(r, k, v, w_log, u, state, *, bh: int = 0,
+               interpret: bool = False):
     """Serve T tokens through the fused recurrence.
 
     r/k/w_log: (T, B, H, K); v: (T, B, H, V); u: (H, K);
-    state: (B, H, K, V) f32.  Returns (y (T, B, H, V) bf16, state')."""
+    state: (B, H, K, V) f32.  Returns (y (T, B, H, V) bf16, state').
+
+    ``bh`` tiles the head axis (grid (T, H/bh), t-major): heads are
+    independent, so any head split is bit-exact; 0 = all heads in one
+    tile (the pre-DSE default).  The state scratch stays full-size and
+    each tile owns its slice — tiles carry no cross-tile state."""
     T, B, H, K = r.shape
     V = v.shape[-1]
-    step = pl.BlockSpec((1, B, H, K), lambda t: (t, 0, 0, 0))
-    stepv = pl.BlockSpec((1, B, H, V), lambda t: (t, 0, 0, 0))
-    full = pl.BlockSpec((B, H, K, V), lambda t: (0, 0, 0, 0))
+    bh = bh or H
+    assert H % bh == 0, (H, bh)
+    step = pl.BlockSpec((1, B, bh, K), lambda t, h: (t, 0, h, 0))
+    stepv = pl.BlockSpec((1, B, bh, V), lambda t, h: (t, 0, h, 0))
+    tile = pl.BlockSpec((B, bh, K, V), lambda t, h: (0, h, 0, 0))
     return pl.pallas_call(
-        _kernel,
-        grid=(T,),
+        functools.partial(_kernel, bh=bh),
+        grid=(T, H // bh),
         in_specs=[step, step, stepv, step,
-                  pl.BlockSpec((H, K), lambda t: (0, 0)), full],
-        out_specs=[stepv, full],
+                  pl.BlockSpec((bh, K), lambda t, h: (h, 0)), tile],
+        out_specs=[stepv, tile],
         out_shape=[
             jax.ShapeDtypeStruct((T, B, H, V), jnp.bfloat16),
             jax.ShapeDtypeStruct((B, H, K, V), F32),
         ],
         scratch_shapes=[pltpu.VMEM((B, H, K, V), F32)],
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
         name="rwkv6_step",
     )(r, k, v, w_log, u, state)

@@ -120,6 +120,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--save-plan", default=None, metavar="PATH",
                     help="write the resolved plan (explicit buckets, "
                          "provenance included) as JSON before serving")
+    ap.add_argument("--hw-spec", default=None, metavar="NAME",
+                    help="hardware spec the kernel tile plans are scored "
+                         "against (repro.hw registry, e.g. tpu-v5e / "
+                         "plasticine-rnn-variant); giving it recomputes "
+                         "tile_plans even when a --plan file carries them")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=None,
@@ -303,15 +308,26 @@ def resolve_plan(args, parser: argparse.ArgumentParser) -> ServingPlan:
     if (new_len is not None and base.buckets is not None
             and base.buckets[-1] != new_len - 1):
         overrides["buckets"] = None
-    # tile plans are scored at (arch, max_batch) — overriding either
-    # would leave a stale kernel design half, so recompute them
-    if base.tile_plans and ({"arch", "max_batch"} & set(overrides)):
-        from repro import hw
+    # tile plans are scored at (arch, max_batch, max_len, hardware) —
+    # overriding any of those would leave a stale kernel design half, so
+    # recompute them; an explicit --hw-spec always recomputes (the whole
+    # point of the flag is rescoring the kernel half for other silicon)
+    from repro import hw
+
+    try:
+        hw_spec = hw.get_spec(args.hw_spec) if args.hw_spec else hw.DEFAULT
+    except KeyError as e:
+        parser.error(str(e))
+    stale = {"arch", "max_batch", "max_len"} & set(overrides)
+    if args.hw_spec or (base.tile_plans and stale):
         from repro.plan import planner
 
-        overrides["tile_plans"] = planner.tile_plans_for(
+        tp = planner.tile_plans_for(
             overrides.get("arch", base.arch),
-            overrides.get("max_batch", base.max_batch), hw.DEFAULT)
+            overrides.get("max_batch", base.max_batch), hw_spec,
+            max_len=overrides.get("max_len", base.max_len))
+        if tp != dict(base.tile_plans):
+            overrides["tile_plans"] = tp
     plan = dataclasses.replace(base, **overrides) if overrides else base
     prov = dict(plan.provenance)
     prov["source"] = source
@@ -351,6 +367,9 @@ def main() -> None:
                          "--checkpoint-dir DIR so it can restart from a "
                          "checkpoint")
     print(f"plan: {plan.summary()}")
+    if plan.tile_plans:
+        from repro.plan.plan import tiles_summary
+        print(f"kernel tiles: {tiles_summary(plan.tile_plans)}")
     if args.save_plan:
         plan_io.save_plan(plan.resolve(), args.save_plan)
         print(f"wrote plan to {args.save_plan}")

@@ -130,12 +130,26 @@ def project_qkv(params, x: jax.Array, cfg: ModelConfig, sharder,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     q_pos: jax.Array, kv_pos: jax.Array, *,
                     cfg: ModelConfig, sharder, causal: bool = True,
-                    window: int = 0, block: int = 0) -> jax.Array:
+                    window: int = 0, block: int = 0,
+                    tile_plan=None) -> jax.Array:
     """Online-softmax attention over unrolled KV blocks.
 
     q: (B, Sq, H, hd); k, v: (B, Skv, K, hd); positions are (B, S) int32.
-    Returns (B, Sq, H, hd).
+    Returns (B, Sq, H, hd).  An active ``tile_plan`` routes to the Pallas
+    flash kernel with the plan's bq/bk BlockSpec geometry (single-device
+    path; the jnp fallback below handles sharded execution).
     """
+    from repro.kernels.dispatch import pallas_active
+
+    if pallas_active(tile_plan):
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_softcap, q_pos=q_pos, kv_pos=kv_pos,
+            plan=tile_plan)
+        return sharder.constrain(
+            out, "batch", "qseq", "heads", None).astype(q.dtype)
     B, Sq, H, hd = q.shape
     Skv, K = k.shape[1], k.shape[2]
     scale = 1.0 / math.sqrt(hd)
@@ -208,9 +222,19 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      kv_pos: jax.Array, q_pos: jax.Array, *,
                      cfg: ModelConfig, sharder, causal: bool = True,
-                     window: int = 0) -> jax.Array:
+                     window: int = 0, tile_plan=None) -> jax.Array:
     """q: (B, H, hd); caches: (B, S, K, hd); kv_pos: (B, S) absolute
-    positions (-1 = empty slot); q_pos: (B,).  Returns (B, H, hd)."""
+    positions (-1 = empty slot); q_pos: (B,).  Returns (B, H, hd).
+    An active ``tile_plan`` routes to the split-KV flash-decoding kernel
+    with the plan's bk chunk size."""
+    from repro.kernels.dispatch import pallas_active
+
+    if pallas_active(tile_plan):
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        return flash_ops.decode(
+            q, k_cache, v_cache, kv_pos, q_pos, causal=causal,
+            window=window, softcap=cfg.attn_softcap, plan=tile_plan)
     B, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = H // K

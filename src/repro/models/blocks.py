@@ -117,14 +117,15 @@ def attn_cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 
 
 def _attn_seq(params, x, cfg: ModelConfig, sharder, positions, *,
-              window: int, mode: str, causal: bool = True, max_len: int = 0):
+              window: int, mode: str, causal: bool = True, max_len: int = 0,
+              tile_plan=None):
     """Full-sequence attention.  Returns (out, cache_entry_or_None)."""
     B, S, _ = x.shape
     q, k, v = attn.project_qkv(params, x, cfg, sharder, positions)
     pos2d = positions if positions.ndim == 2 else positions[:, 0]
     out = attn.flash_attention(
         q, k, v, pos2d, pos2d, cfg=cfg, sharder=sharder, causal=causal,
-        window=window)
+        window=window, tile_plan=tile_plan)
     out = out.reshape(B, S, cfg.q_dim)
     out = dot(out, params["wo"])
     entry = None
@@ -137,7 +138,7 @@ def _attn_seq(params, x, cfg: ModelConfig, sharder, positions, *,
 
 
 def _attn_step(params, x, cfg: ModelConfig, sharder, lengths, cache, *,
-               window: int, positions=None):
+               window: int, positions=None, tile_plan=None):
     """One-token attention over the cache.  x: (B, 1, d)."""
     B = x.shape[0]
     pos = positions if positions is not None else lengths[:, None]
@@ -155,7 +156,7 @@ def _attn_step(params, x, cfg: ModelConfig, sharder, lengths, cache, *,
     kc, vc = _decode_kv(cfg, entry)
     out = attn.decode_attention(
         q[:, 0], kc, vc, entry["pos"], lengths, cfg=cfg, sharder=sharder,
-        causal=True, window=window)
+        causal=True, window=window, tile_plan=tile_plan)
     out = out.reshape(B, 1, cfg.q_dim)
     out = dot(out.astype(x.dtype), params["wo"])
     return out, entry
@@ -209,17 +210,24 @@ def _ffn(params, h, cfg: ModelConfig, sharder):
 def apply_block(params, x, cfg: ModelConfig, kind: str, sharder, *,
                 positions=None, lengths=None, mode: str = "train",
                 cache: Optional[Dict] = None, enc_out=None,
-                causal: bool = True, max_len: int = 0):
+                causal: bool = True, max_len: int = 0, tile_plan=None):
     """Returns (x, new_cache_entry, aux_loss).
 
     In prefill mode ``lengths`` (when not None) marks each example's true
     prompt length within a right-padded batch: recurrent state updates are
     masked to the identity on padded steps (bucketed batched prefill);
-    attention masks padding through the -1 entries of ``positions``."""
+    attention masks padding through the -1 entries of ``positions``.
+
+    ``tile_plan`` is this kind's ``tile_plans`` entry (or None): an active
+    pallas entry routes the hot-path math to the Pallas kernels with the
+    DSE-chosen BlockSpec geometry.  The swa_ssm attention half stays on
+    the jnp path — its plan entry models the SSD recurrence, for which no
+    Pallas kernel exists yet."""
     if kind == "rwkv":
         x, new_cache = rwkv_lib.rwkv_block(
             params, x, cfg, sharder, mode=mode, cache=cache,
-            lengths=lengths if mode == "prefill" else None)
+            lengths=lengths if mode == "prefill" else None,
+            tile_plan=tile_plan)
         if mode == "train":
             new_cache = None
         return x, new_cache, jnp.zeros((), F32)
@@ -255,11 +263,13 @@ def apply_block(params, x, cfg: ModelConfig, kind: str, sharder, *,
         if mode == "decode":
             a_out, a_cache = _attn_step(params["attn"], h, cfg, sharder,
                                         lengths, cache, window=window,
-                                        positions=positions)
+                                        positions=positions,
+                                        tile_plan=tile_plan)
         else:
             a_out, a_cache = _attn_seq(params["attn"], h, cfg, sharder,
                                        positions, window=window, mode=mode,
-                                       causal=causal, max_len=max_len)
+                                       causal=causal, max_len=max_len,
+                                       tile_plan=tile_plan)
         x = x + a_out
         if a_cache:
             new_cache.update(a_cache)

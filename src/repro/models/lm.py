@@ -30,13 +30,21 @@ from repro.models.ssm import _d_inner, _n_ssm_heads
 F32 = jnp.float32
 
 
-def build_model(cfg: ModelConfig) -> "LM":
-    return LM(cfg)
+def build_model(cfg: ModelConfig, tile_plans=None) -> "LM":
+    return LM(cfg, tile_plans=tile_plans)
 
 
 class LM:
-    def __init__(self, cfg: ModelConfig):
+    def __init__(self, cfg: ModelConfig, tile_plans=None):
         self.cfg = cfg
+        # per-kind kernel tile geometry (ServingPlan.tile_plans); entries
+        # reach every apply_block call so an autotuned plan provably
+        # changes the compiled hot path.
+        self.tile_plans = dict(tile_plans or {})
+
+    def with_tile_plans(self, tile_plans) -> "LM":
+        """A copy of this model whose blocks run under ``tile_plans``."""
+        return type(self)(self.cfg, tile_plans=tile_plans)
 
     # ------------------------------------------------------------------ specs
     def param_specs(self) -> Dict[str, Any]:
@@ -83,7 +91,7 @@ class LM:
                 p_params[key], x, cfg, kind, sharder, positions=positions,
                 lengths=lengths, mode=mode, enc_out=enc_out, causal=causal,
                 cache=(p_cache or {}).get(key) if p_cache else None,
-                max_len=max_len)
+                max_len=max_len, tile_plan=self.tile_plans.get(kind))
             aux = aux + a
             if c is not None:
                 new_cache[key] = c

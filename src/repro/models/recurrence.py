@@ -149,3 +149,37 @@ def linear_attention_step(
         read = new_state
     y = jnp.einsum("bhk,bhkv->bhv", q, read)
     return y, new_state
+
+
+def linear_attention_step_planned(
+    state: jax.Array,             # (B, H, K, V)
+    q: jax.Array,                 # (B, H, K)
+    k: jax.Array,                 # (B, H, K)
+    v: jax.Array,                 # (B, H, V)
+    log_decay: jax.Array,         # (B, H, K)
+    *,
+    u: Optional[jax.Array] = None,        # (H, K)
+    tile_plan=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exclusive-convention single-token step, routed by a tile plan.
+
+    With no plan (or ``impl`` resolving to jnp) this is exactly
+    :func:`linear_attention_step`; with an active pallas plan the fused
+    RWKV6 step kernel runs instead, its head tile taken from the plan's
+    ``bh`` (hidden units -> whole heads)."""
+    from repro.kernels.dispatch import interpret_mode, pallas_active
+
+    if not pallas_active(tile_plan):
+        return linear_attention_step(state, q, k, v, log_decay,
+                                     convention="exclusive", u=u)
+    from repro.kernels.rwkv_step.ops import head_tile
+    from repro.kernels.rwkv_step.rwkv_step import rwkv6_step
+
+    H, K = q.shape[1], q.shape[2]
+    bh = head_tile(H, K, tile_plan)
+    y, new_state = rwkv6_step(
+        q[None], k[None], v[None], jnp.broadcast_to(
+            log_decay.astype(F32), k.shape)[None],
+        u.astype(F32) if u is not None else jnp.zeros((H, K), F32),
+        state.astype(F32), bh=bh, interpret=interpret_mode())
+    return y[0].astype(F32), new_state

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.layers import dot, groupnorm_heads, rmsnorm
 from repro.models.params import ParamSpec
-from repro.models.recurrence import chunked_linear_attention, linear_attention_step
+from repro.models.recurrence import (chunked_linear_attention,
+                                     linear_attention_step_planned)
 
 F32 = jnp.float32
 LORA_RANK = 32
@@ -151,7 +152,7 @@ def time_mix(params, x: jax.Array, cfg: ModelConfig, sharder, *,
 
 
 def time_mix_step(params, x: jax.Array, cfg: ModelConfig, sharder, *,
-                  prev: jax.Array, state: jax.Array):
+                  prev: jax.Array, state: jax.Array, tile_plan=None):
     """Single-token wkv (decode).  x: (B, 1, d)."""
     hd = cfg.rwkv.head_dim
     H = cfg.d_model // hd
@@ -159,9 +160,9 @@ def time_mix_step(params, x: jax.Array, cfg: ModelConfig, sharder, *,
     r, k, v, g, log_decay = _time_mix_inputs(params, x, xs, cfg)
     sq = lambda t: t[:, 0, :].reshape(t.shape[0], H, hd)
     u = params["bonus"].astype(F32).reshape(H, hd)
-    y, new_state = linear_attention_step(
+    y, new_state = linear_attention_step_planned(
         state, sq(r), sq(k), sq(v), sq(log_decay),
-        convention="exclusive", u=u)
+        u=u, tile_plan=tile_plan)
     y = y.reshape(x.shape[0], 1, cfg.d_model)
     y = groupnorm_heads(y.astype(x.dtype), params["wkv_norm"], H, cfg.norm_eps)
     out = dot(y * g, params["wo"])
@@ -185,13 +186,16 @@ def channel_mix(params, x: jax.Array, cfg: ModelConfig, sharder, *,
 
 def rwkv_block(params, x: jax.Array, cfg: ModelConfig, sharder, *,
                mode: str, cache: Optional[Dict] = None,
-               lengths: Optional[jax.Array] = None):
+               lengths: Optional[jax.Array] = None, tile_plan=None):
     """Full rwkv block.  Returns (x, new_cache).  ``lengths`` masks padded
-    steps of a right-padded prefill batch (see time_mix)."""
+    steps of a right-padded prefill batch (see time_mix).  ``tile_plan``
+    (a ``tile_plans["rwkv"]`` entry) routes the decode step to the fused
+    Pallas kernel with the DSE-chosen head tile."""
     if mode == "decode":
         h, tm_shift, state = time_mix_step(
             params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg, sharder,
-            prev=cache["tm_shift"], state=cache["wkv_state"])
+            prev=cache["tm_shift"], state=cache["wkv_state"],
+            tile_plan=tile_plan)
         x = x + h
         h, cm_shift = channel_mix(
             params, rmsnorm(x, params["ln2"], cfg.norm_eps), cfg, sharder,

@@ -78,7 +78,12 @@ def check_schema() -> None:
                         buckets=(8, 16, 63), max_len=64,
                         cache_layout="paged:16",
                         retry_budget=5, watchdog_ticks=6,
-                        tile_plans={"rwkv": {"bh": 64}},
+                        tile_plans={
+                            "rwkv": {"bh": 64, "persistent": True,
+                                     "resident": True, "impl": "auto"},
+                            "attn": {"bq": 128, "bk": 512},
+                            "matmul_int8": {"bm": 256, "bn": 256, "bk": 512},
+                        },
                         provenance={"source": "schema-probe"}).validate()
     d = to_dict(probe)
     keys = set(d) - {"schema"}
@@ -91,6 +96,17 @@ def check_schema() -> None:
     if rt != probe:
         raise RuntimeError("ServingPlan no longer round-trips through "
                            "JSON byte-exactly; fix plan.io coercions")
+    # tile_plans validation must stay loud: an unknown kernel kind or a
+    # non-positive tile must never reach a BlockSpec
+    for bad in ({"bogus_kernel": {"bh": 8}}, {"rwkv": {"bh": 0}},
+                {"rwkv": {"impl": "cuda"}}):
+        try:
+            dataclasses.replace(probe, tile_plans=bad).validate()
+        except ValueError:
+            pass
+        else:
+            raise RuntimeError(
+                f"plan.validate() accepted malformed tile_plans {bad}")
     wp = WorkloadProfile(heavy_decode=(0.03, 32, 48))
     if WorkloadProfile.from_json(json.loads(json.dumps(wp.to_json()))) != wp:
         raise RuntimeError("WorkloadProfile no longer round-trips through "

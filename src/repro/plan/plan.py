@@ -287,6 +287,7 @@ class ServingPlan:
                     f"plan.buckets must end at max_len-1 = "
                     f"{self.max_len - 1} so every admissible prompt has a "
                     f"bucket, got {bs}")
+        _validate_tile_plans(self.tile_plans)
         return self
 
     # ------------------------------------------------------------ resolution
@@ -333,5 +334,88 @@ class ServingPlan:
         return " ".join(bits)
 
 
-__all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET",
-           "default_buckets", "parse_cache_layout"]
+# ---------------------------------------------------------------------------
+# tile_plans validation
+# ---------------------------------------------------------------------------
+
+# kernel kinds a tile_plans entry may target: the model's layer kinds plus
+# the two standalone kernels (fused_rnn cell serving, W8A16 matmul)
+TILE_PLAN_KINDS = ("rwkv", "swa_ssm", "attn", "local",
+                   "fused_rnn", "matmul_int8")
+_TILE_FIELDS = ("bh", "bq", "bk", "bm", "bn")
+_META_FIELDS = ("n_tiles", "vmem_bytes", "resident", "step_latency_s",
+                "util", "bound")
+
+
+def _validate_tile_plans(tile_plans) -> None:
+    """Structural validation of ``ServingPlan.tile_plans`` — these dicts
+    parameterize real Pallas BlockSpecs, so a malformed entry must fail at
+    plan time, not as a Mosaic error mid-serving."""
+    from repro.kernels.dispatch import VALID_IMPLS
+
+    for kind, entry in (tile_plans or {}).items():
+        if kind not in TILE_PLAN_KINDS:
+            raise ValueError(
+                f"plan.tile_plans[{kind!r}]: unknown kernel kind "
+                f"(known: {sorted(TILE_PLAN_KINDS)})")
+        if not isinstance(entry, Mapping):
+            raise ValueError(
+                f"plan.tile_plans[{kind!r}] must be a dict, got "
+                f"{type(entry).__name__}")
+        for field, value in entry.items():
+            if field in _TILE_FIELDS:
+                if isinstance(value, bool) or not isinstance(value, int) \
+                        or value < 1:
+                    raise ValueError(
+                        f"plan.tile_plans[{kind!r}][{field!r}] must be a "
+                        f"positive int tile size, got {value!r}")
+            elif field == "persistent":
+                if not isinstance(value, bool):
+                    raise ValueError(
+                        f"plan.tile_plans[{kind!r}]['persistent'] must be "
+                        f"a bool, got {value!r}")
+            elif field == "impl":
+                if value not in VALID_IMPLS:
+                    raise ValueError(
+                        f"plan.tile_plans[{kind!r}]['impl'] must be one of "
+                        f"{VALID_IMPLS}, got {value!r}")
+            elif field not in _META_FIELDS:
+                raise ValueError(
+                    f"plan.tile_plans[{kind!r}][{field!r}]: unknown field "
+                    f"(tiles: {_TILE_FIELDS}; metadata: {_META_FIELDS}; "
+                    f"plus 'persistent'/'impl')")
+        if entry.get("persistent"):
+            # persistent pins the whole weight set in VMEM for the entire
+            # token loop — only admissible with recorded DSE residency
+            # evidence, and never past the VMEM budget
+            if not entry.get("resident"):
+                raise ValueError(
+                    f"plan.tile_plans[{kind!r}]: persistent=true requires "
+                    f"resident=true (DSE evidence the weights fit in VMEM)")
+            vmem = entry.get("vmem_bytes")
+            if vmem is not None:
+                from repro import hw
+                budget = hw.vmem_budget()
+                if int(vmem) > budget:
+                    raise ValueError(
+                        f"plan.tile_plans[{kind!r}]: persistent=true but "
+                        f"vmem_bytes={vmem} exceeds the VMEM budget "
+                        f"{budget}")
+
+
+def tiles_summary(tile_plans) -> str:
+    """Compact hot-path banner fragment: ``rwkv[bh512] attn[bq256,bk1024]``."""
+    bits = []
+    for kind in sorted(tile_plans or {}):
+        entry = tile_plans[kind]
+        tiles = [f"{f}{entry[f]}" for f in _TILE_FIELDS if entry.get(f)]
+        if entry.get("persistent"):
+            tiles.append("persist")
+        if entry.get("impl"):
+            tiles.append(str(entry["impl"]))
+        bits.append(f"{kind}[{','.join(tiles)}]" if tiles else kind)
+    return " ".join(bits)
+
+
+__all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET", "TILE_PLAN_KINDS",
+           "default_buckets", "parse_cache_layout", "tiles_summary"]

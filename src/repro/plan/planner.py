@@ -249,24 +249,41 @@ def candidate_cache_layouts(max_len: int,
 # ---------------------------------------------------------------------------
 
 
-def tile_plans_for(arch: str, max_batch: int,
-                   spec: hw.HardwareSpec) -> Dict[str, Dict[str, object]]:
-    """Embed a ``core.dse`` tile plan per recurrent layer kind, scored at
-    the serving batch (the kernel-level half of the design point).  The
-    recurrent core is modeled as the paper's 3-gate cell at the model
-    width; attention-only architectures carry no tile plans."""
+def tile_plans_for(arch: str, max_batch: int, spec: hw.HardwareSpec,
+                   max_len: int = 2048) -> Dict[str, Dict[str, object]]:
+    """Embed a ``core.dse`` tile plan per layer kind, scored at the
+    serving batch (the kernel-level half of the design point).
+
+    Recurrent kinds run the paper's RNN-cell tile search (3-gate cell at
+    the model width); a plan whose chosen tile keeps the weights VMEM-
+    resident in a single tile is additionally marked ``persistent`` — the
+    fused decode kernel then pins w_h/w_x in VMEM across the whole token
+    loop.  Attention kinds (attn/local) get a bq/bk flash tile plan scored
+    at the config's max sequence.  Every dict is the compact
+    ``dse.plan_dict`` form so unset tile fields never reach the plan
+    (keeps committed plans/BENCH rows byte-stable)."""
     from repro.core import dse
     from repro.core.cells import RNNCellConfig
 
     cfg = _full_model(arch).cfg
     out: Dict[str, Dict[str, object]] = {}
     for kind in sorted(set(cfg.layer_pattern)):
-        if kind not in _RECURRENT_KINDS:
-            continue
-        cell = RNNCellConfig("gru", hidden=cfg.d_model, features=cfg.d_model,
-                             batch=1, precision="bf16")
-        best = dse.best_plan(cell, spec, max_batch=max_batch)
-        out[kind] = dataclasses.asdict(best)
+        if kind in _RECURRENT_KINDS:
+            cell = RNNCellConfig("gru", hidden=cfg.d_model,
+                                 features=cfg.d_model,
+                                 batch=1, precision="bf16")
+            best = dse.best_plan(cell, spec, max_batch=max_batch)
+            entry = dse.plan_dict(best)
+            if best.resident and best.n_tiles == 1:
+                entry["persistent"] = True
+            out[kind] = entry
+        elif kind in ("attn", "local"):
+            seq = max(int(max_len), dse.SUBLANE)
+            window = cfg.local_window if kind == "local" else 0
+            seq_kv = min(seq, window) if window else seq
+            best = dse.best_attn_plan(seq, seq_kv, cfg.head_dim_, spec,
+                                      n_heads=cfg.n_heads, batch=max_batch)
+            out[kind] = dse.plan_dict(best)
     return out
 
 
@@ -401,7 +418,8 @@ def autotune(arch: str, workload: WorkloadProfile,
 
     plan = dataclasses.replace(
         best, sync_every=sync, buckets=buckets, cache_layout=cache_layout,
-        tile_plans=tile_plans_for(arch, best.max_batch, hw_spec),
+        tile_plans=tile_plans_for(arch, best.max_batch, hw_spec,
+                                  max_len=max_len),
         provenance={"autotune": {
             "hw": hw_spec.name, "seed": seed,
             "probe_duration": probe_span,

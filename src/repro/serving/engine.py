@@ -252,6 +252,10 @@ class ServingEngine:
                 truncate_prompts=truncate_prompts,
                 provenance={"source": "engine-kwargs"})
         plan.validate()
+        if plan.tile_plans and hasattr(model, "with_tile_plans"):
+            # thread the DSE-chosen kernel geometry into every block call
+            # (both jit seams below close over this rebound model)
+            model = model.with_tile_plans(plan.tile_plans)
         self.plan = plan
         self.model = model
         self.params = params

@@ -39,6 +39,19 @@ def test_kernel_vs_ref(B, H, K, V, T):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("bh", [1, 2, 4])
+def test_head_tile_is_bit_exact(bh):
+    """PR 9: the grid's head axis (H // bh programs) only re-blocks
+    independent per-head recurrences — every head tile must produce the
+    exact same bits as the whole-H run."""
+    B, H, K, V, T = 2, 4, 16, 16, 5
+    r, k, v, w, u, s0 = _inputs(B, H, K, V, T, seed=1)
+    y_full, sT_full = rwkv6_step(r, k, v, w, u, s0, bh=H, interpret=True)
+    y, sT = rwkv6_step(r, k, v, w, u, s0, bh=bh, interpret=True)
+    assert (np.asarray(y) == np.asarray(y_full)).all()
+    assert (np.asarray(sT) == np.asarray(sT_full)).all()
+
+
 def test_kernel_matches_chunked_train_form():
     """Serving through the fused kernel == the chunked parallel form used
     at train/prefill (the same invariant the LM consistency test checks,
