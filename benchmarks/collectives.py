@@ -1,0 +1,219 @@
+"""Collective-volume trajectory: DCN/ICI traffic per (arch, shape) cell.
+
+For each cell of a small serving-relevant grid — the three tier-1-pinned
+serving archs x {decode_32k, prefill_32k} — this suite compiles the cell
+against the 2x16x16 multi-pod production mesh (512 fake host devices,
+one subprocess per cell because jax locks the device count at first
+initialization) and records the compiled program's *collective* traffic:
+op counts by kind, operand bytes, and modeled ICI bytes, plus peak
+memory and compile wall time.  The deterministic part (everything except
+wall timings) is committed as ``BENCH_collectives.json`` — the repo's
+collective-volume trajectory.
+
+The planner consumes this file: ``repro.plan.planner.load_collectives``
+reads it and ``planner.autotune_fleet`` uses the recorded prefill/decode
+evidence when scoring ``shard_mode`` per fleet replica (a prefill
+replica only gets the prefill sharding when the trajectory actually
+recorded a prefill cell for that arch).
+
+  PYTHONPATH=src python -m benchmarks.collectives [--out BENCH_collectives.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from benchmarks.common import Row
+
+SCHEMA = "collectives/v1"
+DEFAULT_OUT = "BENCH_collectives.json"
+MESH = "pod2x16x16"
+
+# The serving archs tier-1 pins (dense attention, RWKV, hybrid SSM) —
+# the same trio the chaos and paged tier2 grids sweep — at the two
+# serving shapes the fleet planner distinguishes: one decode step and
+# the 32k prefill.
+GRID: Tuple[Tuple[str, str], ...] = tuple(
+    (arch, shape)
+    for arch in ("rwkv6-1.6b", "qwen2.5-14b", "hymba-1.5b")
+    for shape in ("decode_32k", "prefill_32k")
+)
+
+# One subprocess per cell: jax locks the fake-device count at first
+# initialization, so the 512-device mesh cannot share a process with
+# anything else (same pattern as tests/test_dryrun_tier2.py).
+CELL = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from repro.launch.dryrun import run_cell
+
+cell = run_cell(sys.argv[1], sys.argv[2], multi_pod=True, pieces=False)
+cell.pop("traceback", None)
+out = {k: cell.get(k) for k in ("arch", "shape", "mesh", "ok", "skip",
+                                "error", "chips", "wall_s")}
+full = cell.get("full") or {}
+out["flops"] = full.get("flops")
+out["bytes"] = full.get("bytes")
+out["collectives"] = full.get("collectives")
+out["memory"] = full.get("memory")
+out["compile_s"] = full.get("compile_s")
+print("CELL_JSON=" + json.dumps(out))
+"""
+
+
+def run_grid_cell(arch: str, shape: str,
+                  timeout: float = 3600.0) -> Dict[str, object]:
+    """Compile one (arch, shape) cell in a subprocess and return its
+    record: the deterministic collective/memory summary at the top level,
+    host-noisy timings under ``wall``."""
+    r = subprocess.run(
+        [sys.executable, "-c", CELL, arch, shape],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if r.returncode != 0:
+        raise RuntimeError(f"collectives cell {arch}/{shape} failed:\n"
+                           + r.stderr[-3000:])
+    line = next(l for l in r.stdout.splitlines()
+                if l.startswith("CELL_JSON="))
+    raw = json.loads(line[len("CELL_JSON="):])
+    cell: Dict[str, object] = {
+        "arch": raw["arch"],
+        "shape": raw["shape"],
+        "mesh": raw["mesh"],
+        "chips": raw.get("chips"),
+        "ok": raw["ok"],
+    }
+    if raw.get("skip"):
+        cell["skip"] = raw["skip"]
+        return cell
+    if not raw["ok"]:
+        raise RuntimeError(f"collectives cell {arch}/{shape} did not "
+                           f"compile: {raw.get('error')}")
+    cell.update(
+        flops=raw["flops"],
+        bytes=raw["bytes"],
+        collectives=raw["collectives"],
+        memory=raw["memory"],
+        wall={  # host-dependent; excluded from the determinism contract
+            "compile_s": raw["compile_s"],
+            "total_s": raw["wall_s"],
+        },
+    )
+    return cell
+
+
+def sweep(grid: Sequence[Tuple[str, str]] = GRID) -> Dict[str, object]:
+    cells: List[Dict[str, object]] = []
+    for arch, shape in grid:
+        cells.append(run_grid_cell(arch, shape))
+    return {
+        "schema": SCHEMA,
+        "mesh": MESH,
+        "cells": cells,
+    }
+
+
+def deterministic_view(doc: Dict[str, object]) -> Dict[str, object]:
+    """The compile-determined subset (drops wall timings); two runs on
+    the same jax/XLA build must agree on this exactly."""
+    return {
+        **{k: v for k, v in doc.items() if k != "cells"},
+        "cells": [{k: v for k, v in c.items() if k != "wall"}
+                  for c in doc["cells"]],
+    }
+
+
+def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def _check_collectives_surface() -> None:
+    """CI guard for the collective-volume trajectory: the committed
+    BENCH_collectives.json must parse through the planner's reader, cover
+    the grid this suite sweeps, and actually steer
+    ``planner.fleet_shard_modes`` — loudly, in tier-1, so the planner can
+    never silently consult a file the suite no longer writes."""
+    from repro.plan import planner
+
+    colls = planner.load_collectives()
+    if not colls:
+        raise RuntimeError(f"{planner.BENCH_COLLECTIVES} is missing or "
+                           f"empty; regenerate it with "
+                           f"`python -m benchmarks.collectives`")
+    missing = [(a, s) for a, s in GRID if (a, s) not in colls]
+    if missing:
+        raise RuntimeError(f"BENCH_collectives.json lost grid cells "
+                           f"{missing}; regenerate it")
+    for key, block in colls.items():
+        for field in ("n_ops", "operand_bytes", "ici_bytes", "by_kind"):
+            if field not in block:
+                raise RuntimeError(f"collectives block {key} lost field "
+                                   f"{field!r}; the dryrun summary and "
+                                   f"this trajectory drifted")
+    # with prefill evidence on record, a disaggregated fleet's prefill
+    # replica gets the prefill sharding; without it, the planner must
+    # fall back to decode (never invent an unmeasured mode)
+    modes, record = planner.fleet_shard_modes("rwkv6-1.6b", 3, 1, colls)
+    if modes[0] != "prefill" or modes[1:] != ["decode", "decode"]:
+        raise RuntimeError(f"fleet_shard_modes ignored the recorded "
+                           f"prefill evidence: {modes}")
+    modes, _ = planner.fleet_shard_modes("no-such-arch", 2, 1, colls)
+    if modes != ["decode", "decode"]:
+        raise RuntimeError(f"fleet_shard_modes invented a shard mode "
+                           f"without trajectory evidence: {modes}")
+    if record.get("source") != "BENCH_collectives.json":
+        raise RuntimeError("fleet_shard_modes provenance lost its source "
+                           "tag")
+
+
+def _rows(doc: Dict[str, object]) -> Iterator[Row]:
+    for c in doc["cells"]:
+        if c.get("skip"):
+            continue
+        coll = c["collectives"]
+        wall = c.get("wall", {})
+        yield Row(
+            f"collectives/{c['arch']}/{c['shape']}",
+            float(wall.get("compile_s", 0.0)) * 1e6,
+            f"n_ops={coll['n_ops']}"
+            f" ici_gb={coll['ici_bytes'] / 1e9:.3f}"
+            f" operand_gb={coll['operand_bytes'] / 1e9:.3f}"
+            f" kinds={'+'.join(sorted(coll['by_kind']))}")
+
+
+def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
+    """benchmarks.run harness entry.  ``smoke`` validates the committed
+    trajectory against the planner's reader (no compiles, no writes);
+    the real run re-sweeps the grid and refreshes BENCH_collectives.json."""
+    if smoke:
+        _check_collectives_surface()
+        with open(DEFAULT_OUT) as f:
+            yield from _rows(json.load(f))
+        return
+    doc = sweep()
+    write(doc)
+    yield from _rows(doc)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    doc = sweep()
+    write(doc, args.out)
+    print(f"wrote {args.out}: {len(doc['cells'])} cells")
+    for row in _rows(doc):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ import traceback
 
 from benchmarks import (
     chaos,
+    collectives,
     decode_hotpath,
     energy,
     fig4_fragmentation,
@@ -43,6 +44,7 @@ SUITES = {
     "serving_load": serving_load,
     "decode_hotpath": decode_hotpath,
     "chaos": chaos,
+    "collectives": collectives,
 }
 
 

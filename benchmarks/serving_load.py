@@ -40,7 +40,13 @@ import jax
 import numpy as np
 
 from benchmarks.common import Row
-from repro.configs import SERVING_LOAD_SWEEP, ServingLoadCell, get_config
+from repro.configs import (
+    FLEET_SERVING_SWEEP,
+    FleetLoadCell,
+    SERVING_LOAD_SWEEP,
+    ServingLoadCell,
+    get_config,
+)
 from repro.dist.sharding import make_sharder
 from repro.models.lm import build_model
 from repro.plan import WorkloadProfile, io as plan_io
@@ -165,6 +171,76 @@ def run_cell(cell: ServingLoadCell, *, duration: float = 32.0, seed: int = 0,
     return out
 
 
+def _slo_met_tokens(reqs) -> int:
+    """Served tokens that landed inside their deadline (virtual clock, so
+    tick_seconds == 1; same completion rule as the metrics ``slo`` block).
+    The capacity-scaling acceptance metric: adding replicas must grow
+    *useful* throughput, not just tokens."""
+    return sum(len(r.output) for r in reqs
+               if r.deadline is not None and r.t_done is not None
+               and (r.t_done + 1) <= r.deadline)
+
+
+def run_fleet_cell(cell: FleetLoadCell, *, duration: float = 32.0,
+                   seed: int = 0, reduced: bool = True,
+                   _built=None) -> Dict[str, object]:
+    """One fleet cell: build the router fleet from the cell's FleetPlan,
+    serve the cell's workload on one shared virtual clock, return
+    {identity, fleet plan, pooled metrics, transit, wall}.
+
+    The ``metrics`` block pools per-request samples across replicas
+    (``metrics.aggregate_fleet``) and — like every single-replica cell —
+    is a pure function of (cell, seed).  ``slo_met_tokens`` is the
+    capacity-scaling acceptance metric; ``transit`` records the
+    disaggregation hand-off economics (bytes, modeled DCN ticks)."""
+    import dataclasses
+
+    from repro.plan import io as fleet_io
+    from repro.serving.router import Router, drive_fleet
+
+    fleet = cell.fleet
+    if fleet.replicas[0].reduced != reduced:
+        fleet = dataclasses.replace(fleet, replicas=tuple(
+            dataclasses.replace(p, reduced=reduced)
+            for p in fleet.replicas))
+    fleet.validate()
+    cfg = _built[0] if _built else (
+        reduced_config(fleet.replicas[0].arch) if reduced
+        else get_config(fleet.replicas[0].arch))
+    built = {(p.arch, p.reduced): _built[1:] for p in fleet.replicas} \
+        if _built else None
+    router = Router.from_plan(fleet, seed=seed, _built=built)
+    duration = (cell.workload.duration
+                if cell.workload.duration is not None else duration)
+    items = profile_items(cell.workload, vocab_size=cfg.vocab_size,
+                          seed=seed, duration=duration)
+    t0 = time.perf_counter()
+    reqs = drive_fleet(router, items)
+    wall_s = time.perf_counter() - t0
+    agg = router.fleet_aggregate()
+    census = router.conservation_census()
+    if census["total"] != len(reqs):   # keep the BENCH writer honest
+        raise RuntimeError(f"fleet cell {cell.name}: request conservation "
+                           f"violated: {census} vs {len(reqs)} submitted")
+    return {
+        "name": cell.name,
+        "family": cell.family,
+        "n_replicas": fleet.n_replicas,
+        "n_prefill": fleet.n_prefill,
+        "routing": fleet.routing,
+        "rate": cell.workload.rate,
+        "duration": duration,
+        "fleet": fleet_io.fleet_to_dict(fleet.resolve()),
+        "metrics": agg,  # pooled across replicas; deterministic per seed
+        "slo_met_tokens": _slo_met_tokens(reqs),
+        "transit": router.transit_stats(),
+        "wall": {  # host-dependent; excluded from the determinism contract
+            "seconds": wall_s,
+            "tokens_per_sec_wall": agg["tokens"] / wall_s if wall_s else 0.0,
+        },
+    }
+
+
 def autotuned_overload_cell(seed: int = 0) -> ServingLoadCell:
     """The planner's acceptance cell: autotune the committed overload /
     heavy-decode workload (the FCFS cell's profile) and serve it under
@@ -254,9 +330,13 @@ def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
     drifting-workload pair (stale plan vs replan-from-observed-trace).
     ``trace_dir`` archives one trace file per cell."""
     cells = list(cells if cells is not None else SERVING_LOAD_SWEEP)
+    fleet_cells: List[FleetLoadCell] = []
     if autotune:
         cells.append(autotuned_overload_cell(seed))
         cells.extend(drifting_workload_cells(seed))
+        # the fleet grid rides the BENCH-writing runs only, under its own
+        # document key: the single-replica `cells` history never reshapes
+        fleet_cells = list(FLEET_SERVING_SWEEP)
     duration = duration if duration is not None else (32.0 if fast else 256.0)
     built: Dict[str, tuple] = {}  # one model build per arch, many cells
     out_cells: List[Dict[str, object]] = []
@@ -266,7 +346,14 @@ def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
         out_cells.append(run_cell(cell, duration=duration, seed=seed,
                                   reduced=reduced, trace_dir=trace_dir,
                                   _built=built[cell.arch]))
-    return {
+    out_fleet: List[Dict[str, object]] = []
+    for fcell in fleet_cells:
+        arch = fcell.fleet.replicas[0].arch
+        if arch not in built:
+            built[arch] = _build(arch, reduced)
+        out_fleet.append(run_fleet_cell(fcell, duration=duration, seed=seed,
+                                        reduced=reduced, _built=built[arch]))
+    doc = {
         "schema": SCHEMA,
         "seed": seed,
         "mode": "fast" if fast else "full",
@@ -275,16 +362,23 @@ def sweep(fast: bool = True, *, seed: int = 0, reduced: bool = True,
         "families": sorted({c.family for c in cells}),
         "cells": out_cells,
     }
+    if out_fleet:
+        doc["fleet"] = out_fleet
+    return doc
 
 
 def deterministic_view(doc: Dict[str, object]) -> Dict[str, object]:
     """The seed-determined subset of a sweep document (drops wall timings);
     two same-seed runs must agree on this exactly."""
-    return {
-        **{k: v for k, v in doc.items() if k != "cells"},
+    out = {
+        **{k: v for k, v in doc.items() if k not in ("cells", "fleet")},
         "cells": [{k: v for k, v in c.items() if k != "wall"}
                   for c in doc["cells"]],
     }
+    if "fleet" in doc:
+        out["fleet"] = [{k: v for k, v in c.items() if k != "wall"}
+                        for c in doc["fleet"]]
+    return out
 
 
 def write(doc: Dict[str, object], path: str = DEFAULT_OUT) -> None:
@@ -422,6 +516,60 @@ def _check_paged_surface() -> None:
     eng_p.sm.check_invariants()   # raises on any pool-accounting breach
 
 
+def _check_router_surface() -> None:
+    """CI guard for the multi-replica router: the serve CLI's --routing
+    choices must match the router's policy registry, the FleetPlan JSON
+    schema must round-trip (io.check_schema grew a fleet probe), and a
+    tiny 2-replica live probe must serve a seeded workload with clean
+    request conservation and a deterministic pooled metrics block —
+    loudly, in tier-1, so the fleet surfaces can never silently drift."""
+    from repro.launch.serve import build_parser
+    from repro.plan.plan import FleetPlan, ServingPlan
+    from repro.serving.router import ROUTER_POLICIES, Router, drive_fleet
+
+    choices = None
+    for action in build_parser()._actions:
+        if "--routing" in action.option_strings:
+            choices = set(action.choices or ())
+    if choices is None:
+        raise RuntimeError("launch/serve.py no longer exposes --routing")
+    if choices != set(ROUTER_POLICIES):
+        raise RuntimeError(
+            f"--routing CLI choices {sorted(choices)} drifted from the "
+            f"router registry {sorted(ROUTER_POLICIES)}; update "
+            f"launch/serve.py or repro/serving/router.py")
+    plan_io.check_schema()   # includes the fleet_plan/v1 probe
+
+    tiny = WorkloadProfile(kind="poisson", rate=0.8, duration=8.0)
+    cfg, model, params = _build("rwkv6-1.6b", reduced=True)
+    fleet = FleetPlan.replicated(
+        ServingPlan(arch="rwkv6-1.6b", max_batch=2, max_len=32), 2,
+        routing="least_queue").validate()
+    built = {("rwkv6-1.6b", True): (model, params)}
+
+    def one_run():
+        router = Router.from_plan(fleet, seed=0, _built=built)
+        reqs = drive_fleet(router, profile_items(
+            tiny, vocab_size=cfg.vocab_size, seed=0))
+        return router, reqs
+
+    ra, reqs_a = one_run()
+    rb, reqs_b = one_run()
+    census = ra.conservation_census()
+    if census["total"] != len(reqs_a) or census["finished"] != len(reqs_a):
+        raise RuntimeError(f"fleet smoke probe lost requests: {census}")
+    a = json.dumps(ra.fleet_aggregate(), sort_keys=True)
+    b = json.dumps(rb.fleet_aggregate(), sort_keys=True)
+    if a != b:
+        raise RuntimeError("same-seed fleet runs produced different pooled "
+                           "metrics; the router has lost determinism")
+    sched = [[(r.uid, tuple(r.output)) for r in rs]
+             for rs in (reqs_a, reqs_b)]
+    if sched[0] != sched[1]:
+        raise RuntimeError("same-seed fleet runs produced different "
+                           "schedules; the router has lost determinism")
+
+
 def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
     """benchmarks.run harness entry: emit one CSV row per cell and refresh
     BENCH_serving.json in the working directory.  ``smoke`` runs one tiny
@@ -437,6 +585,7 @@ def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
         _check_plan_surface()
         _check_trace_schema()
         _check_paged_surface()
+        _check_router_surface()
         base = [c for c in SERVING_LOAD_SWEEP
                 if c.family == "rwkv" and c.max_batch == 2
                 and c.policy == "fcfs" and c.prompt_dist == "uniform"
@@ -463,6 +612,17 @@ def run(fast: bool = True, smoke: bool = False) -> Iterator[Row]:
             f" qwait_p99={m['queue_wait']['p99']:.0f}t"
             f" tok_per_tick={m['tokens_per_sec']:.2f}"
             f" util={m['mean_util']:.2f}" + slo)
+    for c in doc.get("fleet", ()):
+        m, w = c["metrics"], c["wall"]
+        us_per_tok = w["seconds"] / m["tokens"] * 1e6 if m["tokens"] else 0.0
+        slo = (f" slo={m['slo']['attainment']:.2f}" if "slo" in m else "")
+        yield Row(
+            f"serving_load/{c['name']}",
+            us_per_tok,
+            f"ttft_p99={m['ttft']['p99']:.0f}t"
+            f" tpot_p99={m['tpot']['p99']:.2f}t"
+            f" slo_met_tok={c['slo_met_tokens']}"
+            f" handoffs={c['transit']['handoffs']}" + slo)
 
 
 def main() -> None:
@@ -485,7 +645,8 @@ def main() -> None:
                 reduced=not args.full_size, autotune=True,
                 trace_dir=args.trace_dir)
     write(doc, args.out)
-    print(f"wrote {args.out}: {len(doc['cells'])} cells, "
+    print(f"wrote {args.out}: {len(doc['cells'])} cells "
+          f"+ {len(doc.get('fleet', ()))} fleet cells, "
           f"families={doc['families']}")
     for c in doc["cells"]:
         m = c["metrics"]
@@ -495,6 +656,14 @@ def main() -> None:
               f"  tpot p50/p99 = {m['tpot']['p50']:4.2f}/{m['tpot']['p99']:4.2f}t"
               f"  {m['tokens_per_sec']:5.2f} tok/tick"
               f"  util {m['mean_util']:.2f}" + slo)
+    for c in doc.get("fleet", ()):
+        m = c["metrics"]
+        slo = (f"  slo {m['slo']['attainment']:.2f}" if "slo" in m else "")
+        print(f"  {c['name']:>36}"
+              f" ttft p50/p99 = {m['ttft']['p50']:5.1f}/{m['ttft']['p99']:5.1f}t"
+              f"  tpot p50/p99 = {m['tpot']['p50']:4.2f}/{m['tpot']['p99']:4.2f}t"
+              f"  slo-met tok {c['slo_met_tokens']:4d}"
+              f"  handoffs {c['transit']['handoffs']}" + slo)
 
 
 if __name__ == "__main__":

@@ -69,6 +69,7 @@ from repro.plan import ServingPlan, WorkloadProfile, io as plan_io
 from repro.serving import ServingEngine
 from repro.serving import metrics as smetrics
 from repro.serving import workload as wl
+from repro.serving.router import ROUTING_POLICIES
 from repro.serving.scheduler import POLICIES
 from repro.testing import reduced_config
 
@@ -169,6 +170,21 @@ def build_parser() -> argparse.ArgumentParser:
                          "prefill sample readback before launching the "
                          "decode chunk (the pre-overlap engine behaviour; "
                          "the schedule is identical either way)")
+    # multi-replica serving tier (repro.serving.router)
+    ap.add_argument("--replicas", type=int, default=None, metavar="N",
+                    help="serve through a fleet of N engine replicas "
+                         "behind the router (homogeneous: each replica "
+                         "gets the resolved plan); arrival process "
+                         "required, virtual clock only")
+    ap.add_argument("--routing", default=None, choices=ROUTING_POLICIES,
+                    help="fleet routing policy (choices come from the "
+                         "router registry; default round_robin)")
+    ap.add_argument("--prefill-replicas", type=int, default=None,
+                    metavar="K",
+                    help="disaggregate: the first K replicas run "
+                         "admission/prefill only and stream slot state "
+                         "into the decode replicas over a modeled DCN "
+                         "transit (requires --replicas > K)")
     # open-loop arrival process (the paper's asynchronous-serving scenario)
     ap.add_argument("--arrival", default="batch",
                     choices=("batch",) + wl.ARRIVAL_KINDS,
@@ -336,6 +352,85 @@ def resolve_plan(args, parser: argparse.ArgumentParser) -> ServingPlan:
     return dataclasses.replace(plan, provenance=prov).validate()
 
 
+def _serve_fleet(args, parser, plan) -> None:
+    """Serve through a multi-replica :class:`Router` fleet.
+
+    Homogeneous: every replica runs the resolved plan.  The fleet shares
+    one deterministic virtual clock, so this path is replay-exact — the
+    same seed yields byte-identical fleet schedules."""
+    from repro.plan.plan import FleetPlan
+    from repro.serving.router import Router, drive_fleet
+
+    n = int(args.replicas or 1)
+    k = int(args.prefill_replicas or 0)
+    if n < 1:
+        parser.error("--replicas must be >= 1")
+    if not 0 <= k < n:
+        parser.error("--prefill-replicas must leave at least one decode "
+                     "replica (need 0 <= K < --replicas)")
+    if args.arrival == "batch":
+        parser.error("the fleet router needs an arrival process "
+                     "(--arrival poisson/mmpp/trace): requests are routed "
+                     "on the shared replay clock")
+    if args.clock != "virtual":
+        parser.error("--replicas requires --clock virtual: the fleet "
+                     "replicas share one deterministic clock")
+    if args.fault_spec:
+        parser.error("--fault-spec does not compose with --replicas: "
+                     "fault injection drives a single engine")
+    fleet = FleetPlan.replicated(
+        plan, n, routing=args.routing or "round_robin", n_prefill=k,
+        provenance={"source": "launch.serve"}).validate()
+    print(f"fleet: {fleet.summary()}")
+
+    cfg = reduced_config(plan.arch) if plan.reduced else get_config(plan.arch)
+    tracers = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracers = [Tracer() for _ in range(n)]
+    router = Router.from_plan(fleet, seed=args.seed, tracers=tracers)
+
+    profile = _workload_profile(args)
+    items = wl.profile_items(profile, vocab_size=cfg.vocab_size,
+                             seed=args.seed)
+    span = None if args.arrival == "trace" else args.duration
+    shown = span if span is not None else max((it.t for it in items),
+                                              default=0.0)
+    print(f"replaying {len(items)} {args.arrival} arrivals over "
+          f"{shown:g} virtual-clock units across {n} replicas "
+          f"(offered {wl.offered_load(items, span):.2f} tok/unit)")
+    clock = wl.VirtualClock()
+    t0 = time.time()
+    reqs = drive_fleet(router, items, clock)
+    dt = time.time() - t0
+    agg = router.fleet_aggregate()
+    print(smetrics.format_summary(agg))
+    for i, eng in enumerate(router.engines):
+        role = "prefill" if i < k else "decode"
+        s = eng.stats()
+        print(f"  replica[{i}] ({role}): {len(router.assigned[i])} routed, "
+              f"{s['ticks']} ticks, {s['prefill_calls']} prefill calls, "
+              f"{s['host_syncs']} host syncs")
+    if k:
+        ts = router.transit_stats()
+        print(f"transit: {ts['handoffs']} handoffs, {ts['delivered']} "
+              f"delivered, {ts['bytes']} bytes over {ts['ticks']} transit "
+              f"ticks (bytes/tick {ts['bytes_per_tick']})")
+    census = router.conservation_census()
+    if census["total"] != len(reqs):
+        raise RuntimeError(f"request conservation violated: {census}")
+    print(f"wall: {dt:.2f}s ({len(reqs)} requests conserved)")
+    if tracers is not None:
+        from repro.obs import dumps_trace_doc, merge_traces
+
+        doc = dumps_trace_doc(merge_traces(tracers))
+        with open(args.trace_out, "w") as f:
+            f.write(doc)
+        print(f"wrote merged fleet trace ({n} replicas) to "
+              f"{args.trace_out} (open at https://ui.perfetto.dev)")
+
+
 def main() -> None:
     parser = build_parser()
     args = parser.parse_args()
@@ -346,6 +441,11 @@ def main() -> None:
         logging.getLogger("repro").setLevel(logging.DEBUG)
 
     plan = resolve_plan(args, parser)
+    if args.replicas is not None or args.prefill_replicas:
+        _serve_fleet(args, parser, plan)
+        return
+    if args.routing:
+        parser.error("--routing only applies to a fleet; pass --replicas N")
     fault_plan = None
     if args.fault_spec:
         from repro.serving import FaultPlan

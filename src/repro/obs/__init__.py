@@ -28,5 +28,11 @@ from repro.obs.registry import (  # noqa: F401
     LiveMetrics,
     MetricsRegistry,
 )
-from repro.obs.trace import TraceEvent, Tracer, check_trace  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    TraceEvent,
+    Tracer,
+    check_trace,
+    dumps_trace_doc,
+    merge_traces,
+)
 from repro.obs.observe import fit_profile  # noqa: F401

@@ -234,6 +234,47 @@ def load_trace_doc(path: str) -> Dict[str, object]:
         return json.load(f)
 
 
+def merge_traces(tracers, labels=None) -> Dict[str, object]:
+    """Merge per-replica tracers into one Chrome document with replica-
+    tagged tracks: replica ``r``'s engine events land on pid ``2r+1``
+    and its request tracks on pid ``2r+2``, each named by ``process_name``
+    metadata (``"replica 0 engine"`` / ``"replica 0 requests"`` …) so a
+    fleet run opens in Perfetto as one timeline with the replicas stacked.
+    Event content is untouched — ticks already share the fleet's virtual
+    clock — so the merged document passes :func:`check_trace` and, like a
+    single tracer, serializes byte-identically across same-seed runs
+    (:func:`dumps_trace_doc`)."""
+    tracers = list(tracers)
+    if labels is None:
+        labels = [f"replica {r}" for r in range(len(tracers))]
+    if len(labels) != len(tracers):
+        raise ValueError(f"need one label per tracer: "
+                         f"{len(labels)} labels for {len(tracers)} tracers")
+    events: List[TraceEvent] = []
+    for r, (tr, label) in enumerate(zip(tracers, labels)):
+        e_pid, q_pid = 2 * r + 1, 2 * r + 2
+        events.append(TraceEvent("process_name", "engine", "M", 0,
+                                 e_pid, 0, args={"name": f"{label} engine"}))
+        events.append(TraceEvent("process_name", "request", "M", 0,
+                                 q_pid, 0,
+                                 args={"name": f"{label} requests"}))
+        for e in tr.events:
+            events.append(dataclasses.replace(
+                e, pid=e_pid if e.pid == ENGINE_PID else q_pid))
+    return {
+        "traceEvents": [e.to_json() for e in events],
+        "displayTimeUnit": "ms",
+        "otherData": {"schema": TRACE_SCHEMA, "tick_us": TICK_US,
+                      "replicas": len(tracers)},
+    }
+
+
+def dumps_trace_doc(doc: Mapping[str, object]) -> str:
+    """Canonical serialization for an assembled trace document (same
+    byte contract as :meth:`Tracer.dumps`)."""
+    return json.dumps(doc, sort_keys=True, separators=(",", ":")) + "\n"
+
+
 def check_trace(doc: Mapping[str, object]) -> None:
     """Validate a Chrome-trace document against the documented schema;
     raises ``ValueError`` on the first violation.  This is the drift

@@ -13,19 +13,26 @@ the committed BENCH trajectory files.
 """
 
 from repro.plan.io import (  # noqa: F401
+    FLEET_SCHEMA,
     PLAN_SCHEMA,
+    fleet_from_dict,
+    fleet_to_dict,
     from_dict,
+    load_fleet_plan,
     load_plan,
+    save_fleet_plan,
     save_plan,
     to_dict,
 )
 from repro.plan.plan import (  # noqa: F401
     MIN_BUCKET,
+    FleetPlan,
     ServingPlan,
     WorkloadProfile,
     default_buckets,
 )
 
-__all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET",
-           "default_buckets", "PLAN_SCHEMA", "to_dict", "from_dict",
-           "save_plan", "load_plan"]
+__all__ = ["ServingPlan", "FleetPlan", "WorkloadProfile", "MIN_BUCKET",
+           "default_buckets", "PLAN_SCHEMA", "FLEET_SCHEMA", "to_dict",
+           "from_dict", "save_plan", "load_plan", "fleet_to_dict",
+           "fleet_from_dict", "save_fleet_plan", "load_fleet_plan"]

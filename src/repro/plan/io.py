@@ -18,9 +18,10 @@ import dataclasses
 import json
 from typing import Dict, Mapping
 
-from repro.plan.plan import ServingPlan, WorkloadProfile
+from repro.plan.plan import FleetPlan, ServingPlan, WorkloadProfile
 
 PLAN_SCHEMA = "serving_plan/v1"
+FLEET_SCHEMA = "fleet_plan/v1"
 
 
 # Fields omitted from the JSON when at their default value: the fault-
@@ -70,6 +71,46 @@ def load_plan(path: str) -> ServingPlan:
         return from_dict(json.load(f)).validate()
 
 
+def fleet_to_dict(fleet: FleetPlan) -> Dict[str, object]:
+    """Plain-JSON dict of a fleet plan: per-replica plans serialize
+    through :func:`to_dict` (sharing its omit-at-default rules), the
+    fleet-level knobs ride alongside under the fleet schema tag."""
+    d = {f.name: getattr(fleet, f.name)
+         for f in dataclasses.fields(FleetPlan)}
+    d["replicas"] = [to_dict(p) for p in fleet.replicas]
+    d["provenance"] = dict(fleet.provenance)
+    return {"schema": FLEET_SCHEMA, **d}
+
+
+def fleet_from_dict(d: Mapping[str, object]) -> FleetPlan:
+    """Inverse of :func:`fleet_to_dict`; tolerant of a missing schema tag
+    (fleet dicts embedded in BENCH cells) but loud on a wrong one."""
+    d = dict(d)
+    schema = d.pop("schema", FLEET_SCHEMA)
+    if schema != FLEET_SCHEMA:
+        raise ValueError(f"unsupported fleet schema {schema!r}; "
+                         f"this build reads {FLEET_SCHEMA!r}")
+    known = {f.name for f in dataclasses.fields(FleetPlan)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"unknown fleet fields {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    if "replicas" in d:
+        d["replicas"] = tuple(from_dict(p) for p in d["replicas"])
+    return FleetPlan(**d)
+
+
+def save_fleet_plan(fleet: FleetPlan, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(fleet_to_dict(fleet), f, indent=1)
+        f.write("\n")
+
+
+def load_fleet_plan(path: str) -> FleetPlan:
+    with open(path) as f:
+        return fleet_from_dict(json.load(f)).validate()
+
+
 def check_schema() -> None:
     """Fail loudly when the plan JSON schema and the dataclass fields
     drift apart, or when a default plan stops round-tripping exactly."""
@@ -111,7 +152,42 @@ def check_schema() -> None:
     if WorkloadProfile.from_json(json.loads(json.dumps(wp.to_json()))) != wp:
         raise RuntimeError("WorkloadProfile no longer round-trips through "
                            "JSON; fix plan.io coercions")
+    # fleet schema: same drift + round-trip contract one level up
+    ffields = {f.name for f in dataclasses.fields(FleetPlan)}
+    fprobe = FleetPlan(
+        replicas=(probe, dataclasses.replace(probe, max_batch=8),
+                  dataclasses.replace(probe, cache_layout="dense")),
+        routing="least_queue", n_prefill=1,
+        transit_bytes_per_tick=1e6,
+        provenance={"source": "schema-probe"}).validate()
+    fd = fleet_to_dict(fprobe)
+    fkeys = set(fd) - {"schema"}
+    if fkeys != ffields:
+        raise RuntimeError(
+            f"fleet JSON schema drifted from the FleetPlan dataclass: "
+            f"json-only={sorted(fkeys - ffields)} "
+            f"dataclass-only={sorted(ffields - fkeys)}")
+    frt = fleet_from_dict(json.loads(json.dumps(fd)))
+    if frt != fprobe:
+        raise RuntimeError("FleetPlan no longer round-trips through "
+                           "JSON byte-exactly; fix plan.io coercions")
+    # fleet validation must stay loud on the invariants the router relies
+    # on: a known routing policy and a snapshot-compatible disaggregation
+    for bad in (dataclasses.replace(fprobe, routing="bogus"),
+                dataclasses.replace(fprobe, n_prefill=3),
+                dataclasses.replace(fprobe, replicas=(
+                    probe, dataclasses.replace(probe, max_len=128)),
+                    n_prefill=1)):
+        try:
+            bad.validate()
+        except ValueError:
+            pass
+        else:
+            raise RuntimeError(
+                f"FleetPlan.validate() accepted a malformed fleet: "
+                f"{bad.summary()}")
 
 
-__all__ = ["PLAN_SCHEMA", "to_dict", "from_dict", "save_plan", "load_plan",
-           "check_schema"]
+__all__ = ["PLAN_SCHEMA", "FLEET_SCHEMA", "to_dict", "from_dict",
+           "save_plan", "load_plan", "fleet_to_dict", "fleet_from_dict",
+           "save_fleet_plan", "load_fleet_plan", "check_schema"]

@@ -334,6 +334,118 @@ class ServingPlan:
         return " ".join(bits)
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """One multi-replica serving design point: N per-replica
+    :class:`ServingPlan`\\ s (possibly heterogeneous), a routing policy
+    from the router registry, and the prefill/decode disaggregation
+    split.  The fleet-level analogue of :class:`ServingPlan` — the router
+    is constructed from it (``Router.from_plan``), ``planner.
+    autotune_fleet`` searches over it coarsely, and fleet BENCH cells
+    embed the resolved dict.
+
+    ``n_prefill = 0`` is the colocated mode: every replica admits,
+    prefills and decodes.  ``n_prefill = k > 0`` disaggregates: the first
+    ``k`` replicas run admission/prefill only and stream finished slot
+    state into the remaining decode replicas over a modeled DCN transit
+    (cost per snapshot byte from :mod:`repro.hw` — ``hw`` names the
+    spec; ``transit_bytes_per_tick`` overrides the derived rate, mostly
+    for tests).
+    """
+
+    replicas: Tuple[ServingPlan, ...]
+    routing: str = "round_robin"
+    n_prefill: int = 0
+    transit_bytes_per_tick: Optional[float] = None
+    hw: str = "tpu-v5e"
+    provenance: Mapping[str, object] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "replicas", tuple(self.replicas))
+        object.__setattr__(self, "provenance", _jsonify(self.provenance))
+
+    @staticmethod
+    def replicated(plan: ServingPlan, n: int, *,
+                   routing: str = "round_robin", n_prefill: int = 0,
+                   **kw) -> "FleetPlan":
+        """Homogeneous fleet: ``n`` copies of one replica plan."""
+        return FleetPlan(replicas=(plan,) * int(n), routing=routing,
+                         n_prefill=n_prefill, **kw)
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def validate(self) -> "FleetPlan":
+        """Structural validation; raises ``ValueError`` on the first
+        problem, returns ``self``.  Routing names are checked against the
+        live router registry (lazy import, mirroring how per-replica
+        plans check the scheduler registry); disaggregation additionally
+        pins the snapshot-compat invariants — every replica must share
+        arch/reduced/max_len or a prefill→decode transit could never
+        restore (``SlotManager.check_snapshot_compat`` would reject it)."""
+        if not self.replicas:
+            raise ValueError("fleet.replicas must name at least one replica")
+        if not (0 <= self.n_prefill < len(self.replicas)):
+            raise ValueError(
+                f"fleet.n_prefill must leave at least one decode replica: "
+                f"got n_prefill={self.n_prefill} of "
+                f"{len(self.replicas)} replicas")
+        if self.transit_bytes_per_tick is not None \
+                and self.transit_bytes_per_tick <= 0:
+            raise ValueError(
+                f"fleet.transit_bytes_per_tick must be > 0 when set, "
+                f"got {self.transit_bytes_per_tick}")
+        from repro import hw
+        if self.hw not in hw.SPECS:
+            raise ValueError(f"fleet.hw {self.hw!r} is not a known "
+                             f"hardware spec {sorted(hw.SPECS)}")
+        from repro.serving.router import ROUTER_POLICIES
+        if self.routing not in ROUTER_POLICIES:
+            raise ValueError(
+                f"fleet.routing {self.routing!r} is not in the router "
+                f"registry {sorted(ROUTER_POLICIES)}")
+        for i, plan in enumerate(self.replicas):
+            if not isinstance(plan, ServingPlan):
+                raise ValueError(f"fleet.replicas[{i}] must be a "
+                                 f"ServingPlan, got {type(plan).__name__}")
+            try:
+                plan.validate()
+            except ValueError as e:
+                raise ValueError(f"fleet.replicas[{i}]: {e}") from e
+        if self.n_prefill > 0:
+            ref = self.replicas[0]
+            for i, plan in enumerate(self.replicas):
+                for field in ("arch", "reduced", "max_len"):
+                    if getattr(plan, field) != getattr(ref, field):
+                        raise ValueError(
+                            f"disaggregated fleets need snapshot-compatible "
+                            f"replicas: replicas[{i}].{field}="
+                            f"{getattr(plan, field)!r} differs from "
+                            f"replicas[0].{field}={getattr(ref, field)!r}")
+        return self
+
+    def resolve(self) -> "FleetPlan":
+        """A copy with every replica plan resolved (explicit buckets) —
+        what fleet BENCH cells embed."""
+        return dataclasses.replace(
+            self, replicas=tuple(p.resolve() for p in self.replicas))
+
+    def summary(self) -> str:
+        # plans hold dict fields (tile_plans, provenance) so they are not
+        # hashable; collapse homogeneous fleets by equality instead
+        homogeneous = all(p == self.replicas[0] for p in self.replicas[1:])
+        parts = [f"{len(self.replicas)}x[{self.replicas[0].summary()}]"
+                 if homogeneous else
+                 " | ".join(p.summary() for p in self.replicas),
+                 f"routing={self.routing}"]
+        if self.n_prefill:
+            parts.append(f"prefill={self.n_prefill}/"
+                         f"{len(self.replicas)}")
+        return " ".join(parts)
+
+
 # ---------------------------------------------------------------------------
 # tile_plans validation
 # ---------------------------------------------------------------------------
@@ -417,5 +529,6 @@ def tiles_summary(tile_plans) -> str:
     return " ".join(bits)
 
 
-__all__ = ["ServingPlan", "WorkloadProfile", "MIN_BUCKET", "TILE_PLAN_KINDS",
-           "default_buckets", "parse_cache_layout", "tiles_summary"]
+__all__ = ["ServingPlan", "FleetPlan", "WorkloadProfile", "MIN_BUCKET",
+           "TILE_PLAN_KINDS", "default_buckets", "parse_cache_layout",
+           "tiles_summary"]

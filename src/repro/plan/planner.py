@@ -438,6 +438,155 @@ def autotune(arch: str, workload: WorkloadProfile,
     return plan.validate()
 
 
+# ---------------------------------------------------------------------------
+# fleet-level search
+# ---------------------------------------------------------------------------
+
+BENCH_COLLECTIVES = "BENCH_collectives.json"
+# the dry-run grid records these serve shapes; keys into the trajectory
+_PREFILL_SHAPE = "prefill_32k"
+_DECODE_SHAPE = "decode_32k"
+
+
+def load_collectives(path: str = BENCH_COLLECTIVES
+                     ) -> Dict[Tuple[str, str], Dict[str, object]]:
+    """Read the committed collective-volume trajectory
+    (``benchmarks/collectives.py`` → ``BENCH_collectives.json``):
+    ``{(arch, shape): collectives-summary}`` with the summary carrying
+    ``n_ops`` / ``operand_bytes`` / ``ici_bytes`` / ``by_kind`` exactly as
+    ``repro.launch.hlo.collective_summary`` emits them.  Returns ``{}``
+    when the file is absent — the planner then falls back to defaults
+    and records that no evidence was consulted."""
+    import json
+    import os
+
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        doc = json.load(f)
+    out: Dict[Tuple[str, str], Dict[str, object]] = {}
+    for cell in doc.get("cells", []):
+        out[(str(cell["arch"]), str(cell["shape"]))] = cell["collectives"]
+    return out
+
+
+def fleet_shard_modes(arch: str, n_replicas: int, n_prefill: int,
+                      collectives: Dict[Tuple[str, str], Dict[str, object]]
+                      ) -> Tuple[List[str], Dict[str, object]]:
+    """Per-replica ``shard_mode`` choices scored against the recorded
+    collective volumes.  Decode (and colocated) replicas keep the serving
+    default ``"decode"``; a dedicated prefill replica switches to
+    ``"prefill"`` sharding only when the trajectory actually recorded the
+    arch's prefill-shape program (evidence the sharded compile exists and
+    what it moves over ICI) — with no evidence the planner refuses to
+    guess and leaves the default.  Returns the mode list plus a
+    provenance record of exactly what was consulted."""
+    dec = collectives.get((arch, _DECODE_SHAPE))
+    pre = collectives.get((arch, _PREFILL_SHAPE))
+    record: Dict[str, object] = {
+        "source": BENCH_COLLECTIVES,
+        "decode_ici_bytes": None if dec is None else dec.get("ici_bytes"),
+        "prefill_ici_bytes": None if pre is None else pre.get("ici_bytes"),
+        "consulted": dec is not None or pre is not None,
+    }
+    modes = []
+    for i in range(n_replicas):
+        if i < n_prefill and pre is not None:
+            modes.append("prefill")
+        else:
+            modes.append("decode")
+    record["modes"] = list(modes)
+    return modes, record
+
+
+def autotune_fleet(arch: str, workload: WorkloadProfile,
+                   hw_spec: hw.HardwareSpec = hw.DEFAULT, *,
+                   seed: int = 0, reduced: bool = True, max_len: int = 64,
+                   replica_counts: Sequence[int] = (1, 2, 4),
+                   routings: Sequence[str] = ("round_robin", "least_queue"),
+                   prefill_splits: Sequence[int] = (0, 1),
+                   base_plan: Optional[ServingPlan] = None,
+                   probe_duration: float = 32.0,
+                   collectives: Optional[Dict] = None,
+                   collectives_path: str = BENCH_COLLECTIVES) -> "FleetPlan":
+    """Coarse fleet-level design-space search: replica count × routing
+    policy × prefill:decode split, each candidate ranked by a seeded
+    fleet probe (``drive_fleet`` on the capped workload, scored by the
+    same (SLO, p95 TTFT, p95 queue-wait, tokens/tick) key as the
+    per-engine :func:`autotune`, ties toward the smaller fleet).  The
+    replica design point itself is not re-searched here — pass
+    ``base_plan`` (e.g. an :func:`autotune` winner) to fleet-ify a tuned
+    replica; the default replica is the plan's defaults at this arch.
+
+    Per-replica ``shard_mode`` is then scored against the committed
+    collective-volume trajectory (:func:`load_collectives` — the
+    ``BENCH_collectives.json`` file the tier2 dry-run grid maintains):
+    dedicated prefill replicas get ``"prefill"`` sharding when the
+    trajectory holds evidence for this arch, everything else keeps
+    ``"decode"``.  What was consulted is recorded under
+    ``provenance["autotune_fleet"]["collectives"]``.
+
+    Deterministic for fixed (hw_spec, seed): seeded probes on the virtual
+    clock, fixed enumeration order, ties to the earlier candidate."""
+    from repro.plan.plan import FleetPlan
+    from repro.serving.router import Router, drive_fleet
+    from repro.serving.workload import profile_items
+    from repro.testing import reduced_config
+
+    from repro.configs import get_config
+
+    base = base_plan if base_plan is not None else ServingPlan(
+        arch=arch, reduced=reduced, max_len=max_len)
+    base.validate()
+
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    span = workload.duration if workload.duration is not None \
+        else probe_duration
+    probe_wl = dataclasses.replace(workload,
+                                   duration=min(span, probe_duration))
+    items = profile_items(probe_wl, vocab_size=cfg.vocab_size, seed=seed)
+
+    built: Dict = {}
+    best_key, best_cand, probed = None, None, []
+    for n in sorted(set(int(n) for n in replica_counts)):
+        for routing in routings:
+            for split in sorted(set(int(s) for s in prefill_splits)):
+                if not 0 <= split < n:
+                    continue
+                cand = FleetPlan(replicas=(base,) * n, routing=routing,
+                                 n_prefill=split, hw=hw_spec.name)
+                router = Router.from_plan(cand, seed=seed, _built=built)
+                drive_fleet(router, items)
+                agg = router.fleet_aggregate()
+                key = (_score(agg), -n)
+                probed.append({"replicas": n, "routing": routing,
+                               "n_prefill": split, "score": list(key[0]),
+                               "completed": agg["completed"]})
+                log.debug("fleet probe n%d %s split%d -> %s", n, routing,
+                          split, key)
+                if best_key is None or key > best_key:
+                    best_key, best_cand = key, cand
+
+    coll = collectives if collectives is not None \
+        else load_collectives(collectives_path)
+    modes, coll_record = fleet_shard_modes(
+        arch, best_cand.n_replicas, best_cand.n_prefill, coll)
+    replicas = tuple(
+        dataclasses.replace(p, shard_mode=mode)
+        for p, mode in zip(best_cand.replicas, modes))
+    fleet = dataclasses.replace(
+        best_cand, replicas=replicas,
+        provenance={"autotune_fleet": {
+            "hw": hw_spec.name, "seed": seed,
+            "probe_duration": probe_wl.duration,
+            "workload": workload.to_json(),
+            "probes": probed,
+            "best_score": list(best_key[0]),
+            "collectives": coll_record,
+        }})
+    return fleet.validate()
+
+
 def autotune_from_trace(arch: str, trace,
                         hw_spec: hw.HardwareSpec = hw.DEFAULT, *,
                         duration: Optional[float] = None,
@@ -465,7 +614,9 @@ def autotune_from_trace(arch: str, trace,
     return dataclasses.replace(plan, provenance=prov)
 
 
-__all__ = ["autotune", "autotune_from_trace", "serving_memory_bytes",
+__all__ = ["autotune", "autotune_fleet", "autotune_from_trace",
+           "load_collectives", "fleet_shard_modes", "BENCH_COLLECTIVES",
+           "serving_memory_bytes",
            "modeled_tick_seconds", "pick_sync_every",
            "candidate_bucket_sets", "bucket_set_cost",
            "cache_layout_bytes", "candidate_cache_layouts",

@@ -14,8 +14,18 @@ from repro.serving.faults import (  # noqa: F401
 )
 from repro.serving.metrics import (  # noqa: F401
     aggregate,
+    aggregate_fleet,
     format_summary,
     scale_latencies,
+)
+from repro.serving.router import (  # noqa: F401
+    ROUTER_POLICIES,
+    ROUTING_POLICIES,
+    Router,
+    RoutingPolicy,
+    TransitJob,
+    drive_fleet,
+    make_routing_policy,
 )
 from repro.serving.scheduler import (  # noqa: F401
     EDF,
@@ -48,4 +58,8 @@ from repro.serving.workload import (  # noqa: F401
     profile_items,
     save_trace,
 )
-from repro.plan.plan import ServingPlan, WorkloadProfile  # noqa: F401
+from repro.plan.plan import (  # noqa: F401
+    FleetPlan,
+    ServingPlan,
+    WorkloadProfile,
+)

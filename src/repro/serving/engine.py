@@ -1309,6 +1309,16 @@ class ServingEngine:
     def ticks(self) -> int:
         return self._tick
 
+    def align_clock(self, tick: int) -> None:
+        """Advance the idle tick counter to a shared external clock
+        (never rewinds).  Under a solo ``drive()`` the engine's tick
+        domain may lag the clock while idle — harmless, since every stamp
+        lives in the one engine's domain.  A disaggregated fleet exchanges
+        stamps *across* engines (TTFT on the prefill replica, completion
+        on the decode replica), so the router aligns every replica to the
+        fleet clock before each round; see ``repro.serving.router``."""
+        self._tick = max(self._tick, int(tick))
+
     def reset_telemetry(self) -> None:
         """Zero the counters/histories (e.g. after a jit warmup run, so
         wall-clock tick timings exclude compile).  The engine must be

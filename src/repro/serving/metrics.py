@@ -36,7 +36,7 @@ nearest-rank method: exact, deterministic, no interpolation.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.serving.engine import Request
 
@@ -136,6 +136,36 @@ def aggregate(reqs: Sequence[Request], *, ticks: int,
             "preempted_requests": sum(1 for r in reqs if r.n_preempts),
         }
     return out
+
+
+def aggregate_fleet(parts: Sequence[Tuple[Sequence[Request], int,
+                                          Sequence[float]]], *,
+                    tick_seconds: float = 1.0) -> Dict[str, object]:
+    """Merge per-replica runs into one fleet-level metrics block.
+
+    ``parts`` is one ``(requests, ticks, util_history)`` triple per
+    replica.  The merge pools the *raw per-request samples* and recomputes
+    every percentile over the pooled population — never an average of
+    per-replica percentiles, which has no distributional meaning (a p95
+    averaged across a fast and a slow replica reports a latency no actual
+    request experienced; see the skewed-fleet unit test).  The fleet span
+    is the widest replica span — replicas share one virtual clock, so the
+    busiest replica's tick count is the fleet's serving window and
+    ``tokens_per_sec`` is true fleet throughput, not a per-replica mean.
+    Utilization histories concatenate: mean_util weights each replica by
+    the ticks it actually ran.
+
+    For a single-replica fleet this is byte-identical to
+    :func:`aggregate` on that replica's run — the reduction the fleet
+    equivalence tests pin."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("aggregate_fleet of an empty fleet")
+    reqs = [r for rs, _, _ in parts for r in rs]
+    ticks = max(int(t) for _, t, _ in parts)
+    util = [u for _, _, us in parts for u in us]
+    return aggregate(reqs, ticks=ticks, util_history=util,
+                     tick_seconds=tick_seconds)
 
 
 def scale_latencies(agg: Dict[str, object],

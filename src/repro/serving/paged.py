@@ -295,6 +295,9 @@ class PagedSlotManager(SlotManager):
         super().insert_from_prefill(slots, rows, cacheN)
 
     def restore(self, slot: int, snap: SlotSnapshot, req) -> None:
+        # compat first: an alien snapshot must not touch the block tables
+        # (the base-class check would fire only after _cover mutated them)
+        self.check_snapshot_compat(snap)
         tokens = int(np.asarray(snap.cache_col["lengths"]).reshape(-1)[0])
         self._cover(slot, min(self.max_len, tokens))
         super().restore(slot, snap, req)

@@ -100,6 +100,7 @@ class SlotManager:
         self.max_len = max_len
         self._init_storage(model, max_batch, max_len)
         self._init_byte_accounting(model)
+        self._init_col_specs(model)
         self.slots: List[Optional[object]] = [None] * max_batch
         # host mirrors of the per-slot device control vectors
         self.next_token = np.zeros((max_batch,), np.int32)
@@ -176,6 +177,68 @@ class SlotManager:
                 per_tok = nbytes // (self.max_batch * s)
                 self._ring_token_bytes[s] = (
                     self._ring_token_bytes.get(s, 0) + per_tok)
+
+    # ------------------------------------------------- snapshot compatibility
+    def _init_col_specs(self, model: LM) -> None:
+        """Precompute the expected per-slot snapshot column spec — leaf
+        path → (shape with the slot axis collapsed to 1, dtype) — from the
+        model's cache specs.  This is the compatibility contract a
+        :class:`SlotSnapshot` must meet to be restorable here; it is
+        independent of ``max_batch`` (the slot axis is normalized away)
+        but pins architecture, ``max_len`` (ring lengths) and cache
+        dtypes.  Shared by both layouts: the paged manager snapshots and
+        restores through the same dense-view columns."""
+        ax_by_path = {tuple(p): ax for p, ax in
+                      jax.tree_util.tree_leaves_with_path(self.axes)}
+        self._col_specs: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+        for path, spec in jax.tree_util.tree_leaves_with_path(
+                model.cache_specs(self.max_batch, self.max_len)):
+            ax = ax_by_path[tuple(path)]
+            shape = list(spec.shape)
+            shape[ax] = 1
+            self._col_specs[jax.tree_util.keystr(path)] = (
+                tuple(shape), str(np.dtype(spec.dtype)))
+
+    def snapshot_compat_errors(self, snap: SlotSnapshot) -> List[str]:
+        """Field-naming compatibility report for restoring ``snap`` into
+        this manager.  Empty list ⇒ compatible.  Each entry names the
+        offending cache leaf (pytree path) and how it diverges — missing
+        leaf, extra leaf, shape or dtype mismatch — so a cross-engine
+        transit between engines whose arch/max_len/cache spec differ
+        fails with a readable diagnosis instead of a deep scatter error."""
+        got: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(snap.cache_col):
+            a = np.asarray(leaf)
+            got[jax.tree_util.keystr(path)] = (tuple(a.shape), str(a.dtype))
+        want = self._col_specs
+        errs: List[str] = []
+        for name in sorted(set(want) - set(got)):
+            errs.append(f"{name}: required by this engine's cache spec but "
+                        f"missing from the snapshot (different architecture?)")
+        for name in sorted(set(got) - set(want)):
+            errs.append(f"{name}: present in the snapshot but not in this "
+                        f"engine's cache spec (different architecture?)")
+        for name in sorted(set(want) & set(got)):
+            w_shape, w_dtype = want[name]
+            g_shape, g_dtype = got[name]
+            if g_shape != w_shape:
+                errs.append(
+                    f"{name}: slot-column shape {g_shape} != expected "
+                    f"{w_shape} (origin engine's arch/max_len differs)")
+            elif g_dtype != w_dtype:
+                errs.append(f"{name}: dtype {g_dtype} != expected {w_dtype}")
+        return errs
+
+    def check_snapshot_compat(self, snap: SlotSnapshot) -> None:
+        """Raise ``ValueError`` naming every incompatible cache leaf if
+        ``snap`` cannot be restored into this manager.  The router calls
+        this before every cross-engine transit; :meth:`restore` calls it
+        unconditionally so a bad hand-off can never reach the scatter."""
+        errs = self.snapshot_compat_errors(snap)
+        if errs:
+            raise ValueError(
+                "snapshot incompatible with this engine's cache spec "
+                f"({len(errs)} field(s)):\n  - " + "\n  - ".join(errs))
 
     def _slot_tokens(self, slot: int) -> int:
         """Host-side estimate of a slot's current sequence length (prompt
@@ -302,6 +365,7 @@ class SlotManager:
         if it had never left."""
         if self.slots[slot] is not None:
             raise ValueError(f"restore into occupied slot {slot}")
+        self.check_snapshot_compat(snap)
         self._restores.inc()
         self.cache = scatter_slots(self.cache, self.axes, [slot],
                                    snap.cache_col)

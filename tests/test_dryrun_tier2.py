@@ -158,3 +158,81 @@ def test_chaos_grid_zero_lost_requests(arch, layout, tmp_path):
     assert rep.engine.fault_stats()["injected"] >= 1
     if layout != "dense":
         rep.engine.sm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# tier2 fleet grid: the multi-replica router over every tier-1-pinned
+# serving arch x {2, 4} replicas x {colocated, disaggregated}.  Each cell
+# drives a fleet of reduced in-process engines on one virtual clock and
+# asserts the router's conservation invariant (every arrival finishes or
+# is accountably shed; transits all deliver), plus run-to-run determinism
+# of the pooled fleet metrics.  tier-1 pins the same properties for
+# rwkv6 only (tests/test_router.py); this grid sweeps the archs whose
+# slot state is NOT an O(1) column — dense-attention KV and the hybrid
+# SSM — so prefill->decode snapshot transit is exercised across every
+# cache pytree family.
+# ---------------------------------------------------------------------------
+
+FLEET_TIER2_GRID = [
+    (arch, n, n_prefill)
+    for arch in ("rwkv6-1.6b", "qwen2.5-14b", "hymba-1.5b")
+    for n in (2, 4)
+    for n_prefill in (0, 1)
+]
+
+_FLEET_BUILT = {}   # arch -> (cfg, model, params); shared across cells
+
+
+def _fleet_built(arch):
+    if arch not in _FLEET_BUILT:
+        import jax
+
+        from repro.models.lm import build_model
+        from repro.testing import reduced_config
+
+        cfg = reduced_config(arch)
+        model = build_model(cfg)
+        _FLEET_BUILT[arch] = (cfg, model,
+                              model.init(jax.random.PRNGKey(0)))
+    return _FLEET_BUILT[arch]
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize(
+    "arch,n,n_prefill", FLEET_TIER2_GRID,
+    ids=[f"{a}-x{n}-{'disagg' if k else 'colo'}"
+         for a, n, k in FLEET_TIER2_GRID])
+def test_fleet_grid_conservation(arch, n, n_prefill):
+    from repro.plan.plan import FleetPlan, ServingPlan, WorkloadProfile
+    from repro.serving import profile_items
+    from repro.serving.router import Router, drive_fleet
+
+    cfg, model, params = _fleet_built(arch)
+    plan = ServingPlan(arch=arch, max_batch=2, max_len=32)
+    fleet = FleetPlan.replicated(plan, n, routing="least_queue",
+                                 n_prefill=n_prefill).validate()
+    built = {(arch, True): (model, params)}
+    items = profile_items(
+        WorkloadProfile(kind="poisson", rate=1.2, duration=16.0),
+        vocab_size=cfg.vocab_size, seed=7)
+
+    router = Router.from_plan(fleet, seed=0, _built=built)
+    reqs = drive_fleet(router, items)
+
+    census = router.conservation_census()
+    assert census["total"] == len(items), census
+    assert census["finished"] + census["shed"] == len(items), census
+    for r in reqs:
+        assert r.shed or r.done, f"{arch}: request {r.uid} lost"
+    ts = router.transit_stats()
+    assert ts["delivered"] == ts["handoffs"] and ts["in_flight"] == 0, ts
+    if n_prefill:
+        assert ts["handoffs"] > 0, "disaggregated cell never handed off"
+    agg = router.fleet_aggregate()
+    assert agg["submitted"] == len(items)
+
+    router2 = Router.from_plan(fleet, seed=0, _built=built)
+    drive_fleet(router2, items)
+    assert json.dumps(router2.fleet_aggregate(), sort_keys=True) == \
+        json.dumps(agg, sort_keys=True), f"{arch}: fleet run not " \
+        f"deterministic"

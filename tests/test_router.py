@@ -1,0 +1,424 @@
+"""Fleet property harness for the multi-replica router (repro.serving.router).
+
+The contracts under test:
+
+* a single-replica colocated fleet is the bare engine, bit-exactly —
+  same schedule, same outputs, same metrics JSON (``drive_fleet``
+  reduces branch-for-branch to ``drive`` when there are no transits);
+* fleets are deterministic: same seed, same fleet plan, same workload
+  => byte-identical schedules and pooled metrics, colocated and
+  disaggregated alike;
+* requests are conserved under ANY routing/transit interleaving: every
+  submitted request is queued, in a slot, in transit, or finished —
+  and at drain, finished + shed == submitted;
+* cross-engine snapshot hand-off fails loudly *by field name* when the
+  engines' cache specs disagree (the compat-check helper);
+* ``metrics.aggregate_fleet`` pools per-request samples — it must NOT
+  average per-replica percentiles (the committed divergence case);
+* the committed BENCH_serving.json fleet cells carry the acceptance
+  numbers (capacity scaling, disagg-vs-colocated twin, byte-exact twin).
+"""
+
+import json
+import os
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.lm import build_model
+from repro.plan import io as plan_io
+from repro.plan.plan import FleetPlan, ServingPlan, WorkloadProfile
+from repro.serving import (
+    Request,
+    ServingEngine,
+    SlotSnapshot,
+    VirtualClock,
+    aggregate,
+    aggregate_fleet,
+    drive,
+    profile_items,
+)
+from repro.serving.router import (
+    ROUTER_POLICIES,
+    Router,
+    drive_fleet,
+    make_routing_policy,
+)
+from repro.testing import reduced_config
+
+ARCH = "rwkv6-1.6b"
+MAX_LEN = 32
+BENCH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = reduced_config(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _shared(built):
+    cfg, model, params = built
+    return {(ARCH, True): (model, params)}
+
+
+def _plan(**kw) -> ServingPlan:
+    kw.setdefault("arch", ARCH)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    return ServingPlan(**kw)
+
+
+def _items(cfg, *, rate=0.8, duration=10.0, seed=0, **kw):
+    prof = WorkloadProfile(kind="poisson", rate=rate, duration=duration,
+                           **kw)
+    return profile_items(prof, vocab_size=cfg.vocab_size, seed=seed)
+
+
+def _schedule(reqs):
+    return [(r.uid, tuple(r.output), r.t_submit, r.t_admit, r.t_first,
+             r.t_done, r.shed) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# single-replica fleet == bare engine, bit-exactly
+# ---------------------------------------------------------------------------
+
+
+def test_single_replica_fleet_is_bare_engine(built):
+    cfg, model, params = built
+    plan = _plan()
+    items = _items(cfg)
+
+    engine = ServingEngine.from_plan(plan, params, model=model, seed=0)
+    bare = drive(engine, items, VirtualClock())
+    bare_agg = aggregate(bare, ticks=engine.ticks,
+                         util_history=engine.util_history)
+
+    fleet = FleetPlan.replicated(plan, 1).validate()
+    router = Router.from_plan(fleet, seed=0, _built=_shared(built))
+    freqs = drive_fleet(router, items, VirtualClock())
+
+    assert _schedule(freqs) == _schedule(bare)
+    assert json.dumps(router.fleet_aggregate(), sort_keys=True) == \
+        json.dumps(bare_agg, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seed => byte-identical fleet schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing,n,n_prefill", [
+    ("round_robin", 2, 0),
+    ("least_queue", 2, 0),
+    ("slo_feedback", 2, 0),
+    ("least_queue", 3, 1),
+])
+def test_same_seed_fleets_byte_identical(built, routing, n, n_prefill):
+    cfg, _, _ = built
+    fleet = FleetPlan.replicated(_plan(), n, routing=routing,
+                                 n_prefill=n_prefill).validate()
+
+    def one_run():
+        router = Router.from_plan(fleet, seed=3, _built=_shared(built))
+        reqs = drive_fleet(router, _items(cfg, seed=5))
+        return _schedule(reqs), json.dumps(router.fleet_aggregate(),
+                                           sort_keys=True)
+
+    sched_a, agg_a = one_run()
+    sched_b, agg_b = one_run()
+    assert sched_a == sched_b
+    assert agg_a == agg_b
+
+
+# ---------------------------------------------------------------------------
+# property harness: request conservation under random interleavings
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       n=st.integers(1, 3),
+       n_prefill=st.integers(0, 2),
+       routing=st.sampled_from(sorted(ROUTER_POLICIES)),
+       rate=st.sampled_from([0.4, 0.9, 1.4]))
+def test_fleet_conserves_requests(built, seed, n, n_prefill, routing, rate):
+    cfg, _, _ = built
+    n_prefill = min(n_prefill, n - 1)
+    fleet = FleetPlan.replicated(_plan(), n, routing=routing,
+                                 n_prefill=n_prefill).validate()
+    router = Router.from_plan(fleet, seed=seed, _built=_shared(built))
+    items = _items(cfg, rate=rate, duration=8.0, seed=seed)
+    reqs = drive_fleet(router, items)
+
+    assert len(reqs) == len(items)
+    census = router.conservation_census()
+    assert census["total"] == len(items), census
+    assert census["queued"] == census["in_slot"] == \
+        census["in_transit"] == 0, census
+    assert census["finished"] + census["shed"] == len(items), census
+    for r in reqs:
+        assert r.shed or r.done, \
+            f"request {r.uid} neither finished nor shed"
+    ts = router.transit_stats()
+    assert ts["delivered"] == ts["handoffs"], ts
+    assert ts["in_flight"] == 0, ts
+    # admission-order attribution covers every request exactly once
+    assert sorted(r.uid for rs in router.assigned for r in rs) == \
+        sorted(r.uid for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# disaggregation: hand-offs actually move requests across engines
+# ---------------------------------------------------------------------------
+
+
+def test_disaggregated_fleet_hands_off_every_request(built):
+    cfg, _, _ = built
+    fleet = FleetPlan.replicated(_plan(), 3, n_prefill=1).validate()
+    router = Router.from_plan(fleet, seed=0, _built=_shared(built))
+    reqs = drive_fleet(router, _items(cfg, rate=1.0, duration=12.0))
+
+    done = [r for r in reqs if not r.shed]
+    ts = router.transit_stats()
+    assert ts["handoffs"] == len(done) > 0
+    assert ts["delivered"] == ts["handoffs"]
+    assert ts["bytes"] > 0 and ts["ticks"] >= ts["handoffs"]
+    for r in done:
+        assert r.t_resumes, \
+            f"request {r.uid} never resumed on a decode replica"
+    # the prefill replica drains empty: every slot streamed out
+    assert router.engines[0].sm.n_active() == 0
+    assert len(router.engines[0].finished) == 0
+
+
+def test_transit_cost_model(built):
+    # an explicit bytes/tick override drives the ceil; the paper's
+    # single-accelerator plasticine spec has no DCN (dcn_bw == 0), so
+    # transits there take the 1-tick floor regardless of snapshot size
+    fleet = FleetPlan.replicated(_plan(), 2, n_prefill=1,
+                                 transit_bytes_per_tick=100.0).validate()
+    router = Router.from_plan(fleet, seed=0, _built=_shared(built))
+    assert router.transit_ticks(1) == 1
+    assert router.transit_ticks(250) == 3
+    plast = FleetPlan.replicated(
+        _plan(), 2, n_prefill=1, hw="plasticine-rnn-variant").validate()
+    router_p = Router.from_plan(plast, seed=0, _built=_shared(built))
+    assert router_p.transit_ticks(10**9) == 1
+
+
+# ---------------------------------------------------------------------------
+# cross-engine snapshot compat fails loudly, by field name
+# ---------------------------------------------------------------------------
+
+
+def _live_snapshot(engine):
+    req = engine.submit([1, 2, 3], max_new_tokens=8)
+    for _ in range(8):
+        engine.step()
+        if any(r.uid == req.uid and len(r.output) >= 1
+               for _, r in engine.sm.running()):
+            break
+    slot = next(s for s, r in engine.sm.running() if r.uid == req.uid)
+    return engine.sm.snapshot_many([slot])[0], req
+
+
+def test_rwkv_state_is_max_len_invariant(built):
+    # the paper's cheap hand-off: RNN/SSM slot state is an O(1) column
+    # with no sequence axis, so it restores into ANY max_len engine —
+    # the compat check must agree (no spurious shape errors)
+    cfg, model, params = built
+    src = ServingEngine.from_plan(_plan(), params, model=model, seed=0)
+    dst = ServingEngine.from_plan(_plan(max_len=64), params, model=model,
+                                  seed=0)
+    snap, _ = _live_snapshot(src)
+    assert dst.sm.snapshot_compat_errors(snap) == []
+
+
+def test_snapshot_compat_names_fields():
+    # dense-attention KV caches DO carry max_len in their shape, so a
+    # cross-max_len hand-off must fail loudly, naming each leaf
+    cfg = reduced_config("qwen2.5-14b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def eng(max_len):
+        plan = ServingPlan(arch="qwen2.5-14b", max_batch=2,
+                           max_len=max_len)
+        return ServingEngine.from_plan(plan, params, model=model, seed=0)
+
+    src, dst = eng(MAX_LEN), eng(64)
+    snap, req = _live_snapshot(src)
+
+    errors = dst.sm.snapshot_compat_errors(snap)
+    assert errors, "incompatible snapshot reported no errors"
+    assert all("shape" in e for e in errors)
+    assert any("max_len differs" in e for e in errors)
+    # every error names the offending cache leaf by its pytree path
+    leaf_names = {e.split(":")[0] for e in errors}
+    assert leaf_names and leaf_names <= set(dst.sm._col_specs)
+    with pytest.raises(ValueError, match="snapshot incompatible"):
+        dst.sm.check_snapshot_compat(snap)
+    # restore re-checks unconditionally: a bad hand-off can never scatter
+    with pytest.raises(ValueError, match="snapshot incompatible"):
+        dst.sm.restore(0, snap, req)
+    # the compatible engine accepts the same snapshot
+    assert src.sm.snapshot_compat_errors(snap) == []
+
+    # a snapshot whose pytree disagrees (different architecture) reports
+    # missing and extra leaves, both sides named
+    bogus = SlotSnapshot(cache_col={"bogus": snap.cache_col},
+                         next_token=0)
+    errs = src.sm.snapshot_compat_errors(bogus)
+    assert any("missing from the snapshot" in e for e in errs)
+    assert any("not in this engine's cache spec" in e for e in errs)
+
+
+def test_fleet_plan_rejects_incompatible_disagg():
+    a, b = _plan(), _plan(max_len=64)
+    with pytest.raises(ValueError, match="max_len"):
+        FleetPlan(replicas=(a, b), n_prefill=1).validate()
+    # colocated fleets may mix freely (no snapshot ever crosses engines)
+    FleetPlan(replicas=(a, b)).validate()
+    with pytest.raises(ValueError, match="routing"):
+        FleetPlan.replicated(a, 2, routing="bogus").validate()
+    with pytest.raises(ValueError, match="n_prefill"):
+        FleetPlan.replicated(a, 2, n_prefill=2).validate()
+    with pytest.raises(ValueError, match="at least one replica"):
+        FleetPlan(replicas=()).validate()
+    with pytest.raises(ValueError, match="transit_bytes_per_tick"):
+        FleetPlan.replicated(a, 2, transit_bytes_per_tick=0.0).validate()
+
+
+def test_fleet_plan_round_trips_through_json(tmp_path):
+    fleet = FleetPlan.replicated(
+        _plan(max_batch=4), 3, routing="least_queue", n_prefill=1,
+        transit_bytes_per_tick=1e6,
+        provenance={"source": "test"}).validate()
+    d = plan_io.fleet_to_dict(fleet)
+    assert d["schema"] == plan_io.FLEET_SCHEMA
+    assert plan_io.fleet_from_dict(json.loads(json.dumps(d))) == fleet
+    path = tmp_path / "fleet.json"
+    plan_io.save_fleet_plan(fleet, str(path))
+    assert plan_io.load_fleet_plan(str(path)) == fleet
+
+
+def test_routing_registry():
+    assert set(ROUTER_POLICIES) == {"round_robin", "least_queue",
+                                    "slo_feedback"}
+    for name in ROUTER_POLICIES:
+        assert make_routing_policy(name).name == name
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        make_routing_policy("bogus")
+
+
+# ---------------------------------------------------------------------------
+# aggregate_fleet pools samples (never averages percentiles)
+# ---------------------------------------------------------------------------
+
+
+def _req(uid, t_submit, t_admit, t_first, t_done, n_out=4):
+    return Request(uid=uid, prompt=[1, 2], max_new_tokens=n_out,
+                   output=[7] * n_out, done=True, t_submit=t_submit,
+                   t_admit=t_admit, t_first=t_first, t_done=t_done)
+
+
+def test_aggregate_fleet_pools_samples_across_skewed_replicas():
+    # replica A: 9 fast requests (ttft 2); replica B: 9 slow (ttft 101).
+    # The pooled p95 sits in the slow half (101); the naive mean of
+    # per-replica p95s reports 51.5 — a latency no request experienced.
+    fast = [_req(i, 0, 1, 1, 5) for i in range(9)]
+    slow = [_req(100 + i, 0, 100, 100, 104) for i in range(9)]
+    pooled = aggregate_fleet([(fast, 200, [0.5]), (slow, 300, [1.0])])
+
+    agg_fast = aggregate(fast, ticks=200, util_history=[0.5])
+    agg_slow = aggregate(slow, ticks=300, util_history=[1.0])
+    naive_p95 = (agg_fast["ttft"]["p95"] + agg_slow["ttft"]["p95"]) / 2
+
+    assert pooled["ttft"]["p95"] == 101.0
+    assert naive_p95 == pytest.approx(51.5)
+    # pooling == aggregating the concatenated population, definitionally
+    assert json.dumps(pooled, sort_keys=True) == json.dumps(
+        aggregate(fast + slow, ticks=300, util_history=[0.5, 1.0]),
+        sort_keys=True)
+    assert pooled["submitted"] == 18
+    assert pooled["ticks"] == 300        # widest replica span
+    assert pooled["mean_util"] == pytest.approx(0.75)
+
+
+def test_aggregate_fleet_single_replica_identity():
+    reqs = [_req(i, 0, i, i, i + 4) for i in range(5)]
+    assert json.dumps(aggregate_fleet([(reqs, 60, [0.25])]),
+                      sort_keys=True) == \
+        json.dumps(aggregate(reqs, ticks=60, util_history=[0.25]),
+                   sort_keys=True)
+
+
+def test_aggregate_fleet_empty_rejected():
+    with pytest.raises(ValueError, match="empty fleet"):
+        aggregate_fleet([])
+
+
+# ---------------------------------------------------------------------------
+# committed trajectory: the BENCH fleet cells carry the acceptance numbers
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bench():
+    with open(BENCH) as f:
+        return json.load(f)
+
+
+def test_bench_has_fleet_section(bench):
+    assert "fleet" in bench, "BENCH_serving.json lost its fleet section"
+    names = [c["name"] for c in bench["fleet"]]
+    assert len(names) == len(set(names))
+    for c in bench["fleet"]:
+        fleet = plan_io.fleet_from_dict(c["fleet"])
+        fleet.validate()
+        assert fleet.n_replicas == c["n_replicas"]
+        assert "wall" in c   # split out so deterministic_view drops it
+
+
+def test_bench_twin_cell_matches_bare_cell(bench):
+    twin = next(c for c in bench["fleet"] if c["name"].endswith("/twin"))
+    bare = next(c for c in bench["cells"]
+                if c["name"] == "rwkv6-1.6b/b2/r1")
+    assert json.dumps(twin["metrics"], sort_keys=True) == \
+        json.dumps(bare["metrics"], sort_keys=True), \
+        "single-replica fleet drifted from the bare engine trajectory"
+
+
+def test_bench_capacity_scaling_acceptance(bench):
+    cells = sorted((c for c in bench["fleet"]
+                    if c["name"].endswith("/capacity")),
+                   key=lambda c: c["n_replicas"])
+    assert [c["n_replicas"] for c in cells] == [1, 2, 4]
+    one, two, four = cells
+    # the capacity bar: >= 1.8x SLO-met served tokens going 1 -> 2
+    # replicas under overload, with 2-replica attainment >= 0.95
+    assert two["metrics"]["slo"]["attainment"] >= 0.95
+    assert two["slo_met_tokens"] >= 1.8 * one["slo_met_tokens"], \
+        (one["slo_met_tokens"], two["slo_met_tokens"])
+    assert four["metrics"]["slo"]["attainment"] >= 0.95
+    assert four["slo_met_tokens"] >= two["slo_met_tokens"]
+
+
+def test_bench_disagg_beats_colocated_twin(bench):
+    colo = next(c for c in bench["fleet"]
+                if c["name"].endswith("/colocated"))
+    dis = next(c for c in bench["fleet"] if c["name"].endswith("/disagg"))
+    assert dis["n_prefill"] >= 1 and colo["n_prefill"] == 0
+    # the heavy-tail cell: disaggregation improves p99 TTFT without
+    # regressing p99 TPOT against its colocated twin
+    assert dis["metrics"]["ttft"]["p99"] < colo["metrics"]["ttft"]["p99"]
+    assert dis["metrics"]["tpot"]["p99"] <= colo["metrics"]["tpot"]["p99"]
+    assert dis["transit"]["handoffs"] > 0
+    assert dis["transit"]["delivered"] == dis["transit"]["handoffs"]
